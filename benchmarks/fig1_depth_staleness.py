@@ -1,0 +1,78 @@
+"""Paper Fig. 1: batches-to-target vs staleness, by model depth.
+
+(a)-(d): ResNet (6n+2) under SGD and Adam; (e)(f): MLR/DNN depths. The
+headline claims validated here: C1 (staleness slows convergence), C2 (deeper
+models are hurt more), C5 (MLR, convex, is barely affected).
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks import common
+
+
+def run(quick: bool = False, workers: int = 8, seeds=(0,)):
+    depths = [0, 1, 3] if quick else [0, 1, 2, 3]
+    stalenesses = [0, 8, 16] if quick else [0, 4, 8, 16]
+    algos = ["sgd"] if quick else ["sgd", "adam"]
+    max_steps = 1500 if quick else 4000
+
+    rows = []
+    for algo in algos:
+        for depth in depths:
+            per_s = {}
+            for s in stalenesses:
+                btts = []
+                for seed in seeds:
+                    r = common.dnn_experiment(depth=depth, algo=algo, s=s,
+                                              workers=workers, seed=seed,
+                                              max_steps=max_steps)
+                    btts.append(r.batches_to_target if r.converged else None)
+                ok = [b for b in btts if b is not None]
+                per_s[s] = (sum(ok) / len(ok)) if ok else None
+                rows.append(("dnn", algo, depth, s,
+                             per_s[s] if per_s[s] else -1))
+            base = per_s.get(0)
+            for s in stalenesses:
+                norm = (per_s[s] / base) if (base and per_s[s]) else float("nan")
+                rows.append(("dnn_norm", algo, depth, s, round(norm, 3)))
+
+    common.print_csv("fig1_dnn", rows, "model,algo,depth,staleness,batches_or_norm")
+    return rows
+
+
+def run_cnn(quick: bool = False, workers: int = 8):
+    """ResNet depth scaling (Fig 1(a)-(d)); reduced widths for CPU."""
+    blocks = [1, 2] if quick else [1, 2, 3]   # ResNet8 / 14 / 20
+    stalenesses = [0, 8] if quick else [0, 4, 8, 16]
+    rows = []
+    for algo in (["sgd"] if quick else ["sgd", "adam"]):
+        for n in blocks:
+            per_s = {}
+            for s in stalenesses:
+                r = common.cnn_experiment(n_blocks=n, algo=algo, s=s,
+                                          workers=workers,
+                                          max_steps=400 if quick else 1200)
+                per_s[s] = r.batches_to_target if r.converged else None
+                rows.append(("cnn", algo, 6 * n + 2, s, per_s[s] or -1))
+            base = per_s.get(0)
+            for s in stalenesses:
+                norm = (per_s[s] / base) if (base and per_s[s]) else float("nan")
+                rows.append(("cnn_norm", algo, 6 * n + 2, s, round(norm, 3)))
+    common.print_csv("fig1_cnn", rows, "model,algo,depth,staleness,batches_or_norm")
+    return rows
+
+
+def main(quick: bool = False, out: str | None = None):
+    rows = run(quick=quick)
+    rows += run_cnn(quick=quick)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv,
+         out="experiments/fig1.json")

@@ -1,0 +1,67 @@
+"""Paper Fig. 2: algorithm sensitivity to staleness (C3).
+
+Five SGD variants on the CNN, batches to target accuracy vs staleness,
+normalized by s=0 — SGD/Adagrad robust, Adam/Momentum/RMSProp fragile
+(RMSProp may fail outright).
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks import common
+
+ALGOS = ["sgd", "momentum", "adam", "adagrad", "rmsprop"]
+
+
+def run(quick: bool = False, workers: int = 8):
+    stalenesses = [0, 8] if quick else [0, 4, 8, 16]
+    algos = ["sgd", "adam", "rmsprop"] if quick else ALGOS
+    rows = []
+    for algo in algos:
+        per_s = {}
+        for s in stalenesses:
+            r = common.cnn_experiment(n_blocks=1, algo=algo, s=s,
+                                      workers=workers,
+                                      max_steps=400 if quick else 1200)
+            per_s[s] = r.batches_to_target if r.converged else None
+            rows.append(("cnn_resnet8", algo, s, per_s[s] or -1))
+        base = per_s.get(0)
+        for s in stalenesses:
+            norm = (per_s[s] / base) if (base and per_s[s]) else float("nan")
+            rows.append(("cnn_resnet8_norm", algo, s, round(norm, 3)))
+    common.print_csv("fig2_algorithms", rows, "model,algo,staleness,batches_or_norm")
+    return rows
+
+
+def run_dnn_algos(quick: bool = False, workers: int = 1):
+    """Appendix Fig. 7 companion: DNN depth x algorithm on 1 worker."""
+    stalenesses = [0, 16] if quick else [0, 8, 16, 32]
+    algos = ["sgd", "adam"] if quick else ALGOS
+    depths = [1] if quick else [0, 1, 3]
+    rows = []
+    for algo in algos:
+        for depth in depths:
+            per_s = {}
+            for s in stalenesses:
+                r = common.dnn_experiment(depth=depth, algo=algo, s=s,
+                                          workers=workers,
+                                          max_steps=2000 if quick else 8000)
+                per_s[s] = r.batches_to_target if r.converged else None
+                rows.append(("dnn", algo, depth, s, per_s[s] or -1))
+    common.print_csv("fig7_dnn_algos", rows, "model,algo,depth,staleness,batches")
+    return rows
+
+
+def main(quick: bool = False, out: str | None = None):
+    rows = run(quick=quick)
+    if not quick:
+        rows += run_dnn_algos(quick=quick)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv, out="experiments/fig2.json")

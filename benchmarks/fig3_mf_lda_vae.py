@@ -1,0 +1,71 @@
+"""Paper Fig. 3: MF worker amplification (C4), LDA staleness threshold (C6),
+VAE sensitivity (C7)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks import common
+
+
+def run_mf(quick: bool = False):
+    stalenesses = [0, 10, 20] if quick else [0, 5, 10, 15, 20, 30, 50]
+    rows = []
+    for workers in [4, 8]:
+        per_s = {}
+        for s in stalenesses:
+            r = common.mf_experiment(s=s, workers=workers,
+                                     max_steps=3000 if quick else 6000)
+            per_s[s] = r.batches_to_target if r.converged else None
+            rows.append(("mf", workers, s, per_s[s] or -1))
+        base = per_s.get(0)
+        for s in stalenesses:
+            norm = (per_s[s] / base) if (base and per_s[s]) else float("nan")
+            rows.append(("mf_norm", workers, s, round(norm, 3)))
+    common.print_csv("fig3_mf", rows, "model,workers,staleness,batches_or_norm")
+    return rows
+
+
+def run_lda(quick: bool = False):
+    stalenesses = [0, 10, 20] if quick else [0, 5, 10, 15, 20]
+    rows = []
+    for workers, k in ([(2, 10)] if quick else [(2, 10), (8, 10), (2, 50)]):
+        for s in stalenesses:
+            curve = common.lda_experiment(s=s, workers=workers, k_topics=k,
+                                          sweeps=6 if quick else 30)
+            final_ll = curve[-1][1] if curve else float("nan")
+            rows.append(("lda", workers, k, s, round(final_ll, 1)))
+    common.print_csv("fig3_lda", rows, "model,workers,topics,staleness,final_ll")
+    return rows
+
+
+def run_vae(quick: bool = False):
+    stalenesses = [0, 8] if quick else [0, 4, 8, 16]
+    depths = [1] if quick else [1, 2, 3]
+    rows = []
+    for algo in (["adam"] if quick else ["adam", "sgd"]):
+        for depth in depths:
+            per_s = {}
+            for s in stalenesses:
+                r = common.vae_experiment(depth=depth, algo=algo, s=s, workers=8,
+                                          max_steps=1500 if quick else 4000)
+                per_s[s] = r.batches_to_target if r.converged else None
+                rows.append(("vae", algo, depth, s, per_s[s] or -1))
+            base = per_s.get(0)
+            for s in stalenesses:
+                norm = (per_s[s] / base) if (base and per_s[s]) else float("nan")
+                rows.append(("vae_norm", algo, depth, s, round(norm, 3)))
+    common.print_csv("fig3_vae", rows, "model,algo,depth,staleness,batches_or_norm")
+    return rows
+
+
+def main(quick: bool = False, out: str | None = None):
+    rows = run_mf(quick) + run_lda(quick) + run_vae(quick)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv, out="experiments/fig3.json")

@@ -1,0 +1,117 @@
+"""Paper Fig. 4: (a)(b) gradient coherence over the course of training under
+staleness (C8: mostly positive, improves as training progresses);
+(c) geometric-delay convergence (C9: qualitatively like uniform).
+
+The probe follows footnote 6 / Fig. 4's protocol: gradients on a fixed probe
+set of 1000 training samples, compared across a lag window.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import treemath as tm
+from repro.core import (StalenessConfig, UniformDelay, init_coherence,
+                        init_sim_state, make_sim_step, observe)
+from repro.core.delay import matched_geometric
+from repro.data import ShardedBatches, synthetic
+from repro.models import mlp
+from repro.optim import optimizers as optlib
+
+
+def coherence_trace(depth: int, algo: str, s: int, workers: int = 8,
+                    steps: int = 1500, probe_every: int = 10,
+                    window: int = 8, seed: int = 0):
+    """Train a DNN under the engine while recording cos(g_k, g_{k-m})."""
+    data = synthetic.teacher_classification(seed=0)
+    cfg_m = mlp.MLPConfig(depth=depth)
+    params = mlp.init(jax.random.PRNGKey(seed), cfg_m)
+    opt = optlib.paper_default(algo)
+    update_fn = optlib.make_sgd_update_fn(mlp.loss_fn, opt)
+    scfg = StalenessConfig(num_workers=workers, delay=UniformDelay(s))
+    state = init_sim_state(params, opt.init(params), scfg,
+                           jax.random.PRNGKey(seed))
+    step = jax.jit(make_sim_step(update_fn, scfg))
+
+    probe = (jnp.asarray(data.x_train[:1000]), jnp.asarray(data.y_train[:1000]))
+    dim = tm.tree_size(params)
+    coh = init_coherence(dim, window)
+
+    @jax.jit
+    def probe_grad(p):
+        return tm.tree_flatten_to_vector(jax.grad(mlp.loss_fn)(p, probe))
+
+    observe_jit = jax.jit(observe)
+    batches = iter(ShardedBatches([data.x_train, data.y_train], workers, 32,
+                                  seed=seed))
+    trace = []
+    for t in range(steps):
+        state, _ = step(state, next(batches))
+        if (t + 1) % probe_every == 0:
+            g = probe_grad(jax.tree.map(lambda x: x[0], state.caches))
+            coh, out = observe_jit(coh, g)
+            trace.append((t + 1, float(out["mu"]),
+                          [round(float(c), 4) for c in out["cos_by_lag"]]))
+    return trace
+
+
+def run_coherence(quick: bool = False):
+    rows = []
+    steps = 400 if quick else 1500
+    for algo in (["sgd"] if quick else ["sgd", "adam"]):
+        trace = coherence_trace(depth=2, algo=algo, s=4, steps=steps)
+        n = len(trace)
+        for phase, sl in [("early", slice(0, n // 3)),
+                          ("mid", slice(n // 3, 2 * n // 3)),
+                          ("late", slice(2 * n // 3, n))]:
+            mus = [t[1] for t in trace[sl]]
+            cos1 = [t[2][0] for t in trace[sl]]
+            cos8 = [t[2][-1] for t in trace[sl]]
+            rows.append(("coherence", algo, phase, round(float(np.mean(mus)), 4),
+                         round(float(np.mean(cos1)), 4),
+                         round(float(np.mean(cos8)), 4)))
+    common.print_csv("fig4_coherence", rows,
+                     "metric,algo,phase,mean_mu,mean_cos_lag1,mean_cos_lag8")
+    return rows
+
+
+def run_geometric(quick: bool = False):
+    """Fig 4(c): geometric vs uniform delays at matched mean."""
+    rows = []
+    depths = [1] if quick else [0, 1, 3]
+    for depth in depths:
+        for s in ([0, 8] if quick else [0, 8, 16]):
+            if s == 0:
+                ru = common.dnn_experiment(depth=depth, algo="sgd", s=0,
+                                           workers=8,
+                                           max_steps=1500 if quick else 4000)
+                rows.append(("uniform", depth, s, ru.batches_to_target or -1))
+                rows.append(("geometric", depth, s, ru.batches_to_target or -1))
+                continue
+            ru = common.dnn_experiment(depth=depth, algo="sgd", s=s, workers=8,
+                                       max_steps=1500 if quick else 4000)
+            geo = matched_geometric(s, 8)
+            rg = common.dnn_experiment(depth=depth, algo="sgd", s=s, workers=8,
+                                       delay=geo,
+                                       max_steps=1500 if quick else 4000)
+            rows.append(("uniform", depth, s, ru.batches_to_target or -1))
+            rows.append(("geometric", depth, s, rg.batches_to_target or -1))
+    common.print_csv("fig4c_geometric", rows, "delay,depth,staleness,batches")
+    return rows
+
+
+def main(quick: bool = False, out: str | None = None):
+    rows = run_coherence(quick) + run_geometric(quick)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv, out="experiments/fig4.json")

@@ -1,0 +1,36 @@
+"""Paper Fig. 5: gradient coherence decreases with model depth (C8b) —
+the mechanism behind C2 (deeper models suffer more from staleness)."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.fig4_coherence import coherence_trace
+
+
+def main(quick: bool = False, out: str | None = None):
+    rows = []
+    depths = [0, 2] if quick else [0, 1, 2, 4]
+    steps = 300 if quick else 1200
+    for depth in depths:
+        trace = coherence_trace(depth=depth, algo="sgd", s=4, steps=steps)
+        # mean cosine per lag over the second half of training
+        half = trace[len(trace) // 2:]
+        lags = np.mean(np.array([t[2] for t in half]), axis=0)
+        mu = float(np.mean([t[1] for t in half]))
+        rows.append(("coherence_by_depth", depth, round(mu, 4),
+                     *[round(float(x), 4) for x in lags]))
+    common.print_csv("fig5", rows,
+                     "metric,depth,mean_mu," +
+                     ",".join(f"cos_lag{m}" for m in range(1, 9)))
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv, out="experiments/fig5.json")

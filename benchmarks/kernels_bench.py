@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: ``name,us_per_call,derived`` CSV.
+
+On this CPU container the Pallas kernels run in interpret mode, so the jnp
+reference path is what gets timed for throughput (the kernels' own numbers
+are correctness artifacts, not perf); ``derived`` reports achieved GB/s of
+the reference to situate against the 819 GB/s HBM roofline target.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    print("name,us_per_call,derived")
+    d, s = 1 << 22, 8
+    p = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    buf = jax.random.normal(jax.random.PRNGKey(1), (s, d))
+    w = jnp.ones((s,))
+    f = jax.jit(ref.stale_accum)
+    us = _time(f, p, buf, w)
+    moved = (d * (s + 2)) * 4
+    print(f"stale_accum_ref_d{d}_s{s},{us:.1f},{moved/us/1e3:.1f}GB/s")
+
+    hist = jax.random.normal(jax.random.PRNGKey(2), (8, d))
+    g = jax.random.normal(jax.random.PRNGKey(3), (d,))
+    f = jax.jit(ref.coherence_dots)
+    us = _time(f, hist, g)
+    moved = d * 9 * 4
+    print(f"coherence_ref_d{d}_w8,{us:.1f},{moved/us/1e3:.1f}GB/s")
+
+    m = jnp.zeros((d,))
+    v = jnp.zeros((d,))
+    f = jax.jit(lambda p, m, v, g: ref.fused_adam(p, m, v, g, 1e-3, 0.9, 0.999,
+                                                  1e-8, 1))
+    us = _time(f, p, m, v, g)
+    moved = d * 7 * 4
+    print(f"fused_adam_ref_d{d},{us:.1f},{moved/us/1e3:.1f}GB/s")
+
+    b, sq, h, hd = 1, 1024, 8, 64
+    q = jax.random.normal(jax.random.PRNGKey(4), (b, sq, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(5), (b, sq, h, hd))
+    vv = jax.random.normal(jax.random.PRNGKey(6), (b, sq, h, hd))
+    f = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v, causal=True))
+    us = _time(f, q, k, vv, iters=5)
+    flops = 4 * b * h * sq * sq * hd
+    print(f"attention_ref_b{b}_s{sq},{us:.1f},{flops/us/1e6:.2f}GFLOP/s")
+
+    # interpret-mode kernel correctness spot check rides along (cheap shapes)
+    from repro.kernels import ops
+    import numpy as np
+    small = 4096
+    got = ops.stale_accum(p[:small], buf[:, :small], w)
+    want = ref.stale_accum(p[:small], buf[:, :small], w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    print("kernel_interpret_check,0,allclose_ok")
+
+
+if __name__ == "__main__":
+    main()

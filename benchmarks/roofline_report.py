@@ -1,0 +1,57 @@
+"""Render the §Roofline table from experiments/dryrun.jsonl."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path="experiments/dryrun.jsonl"):
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("ok"):
+                recs[r["key"]] = r  # last write wins
+    return recs
+
+
+def table(recs, mesh_filter="pod", markdown=False):
+    rows = []
+    for key, r in sorted(recs.items()):
+        if f"|{mesh_filter}|" not in key:
+            continue
+        rf = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], r["meta"].get("mode", r["shape"]),
+            f"{rf['compute_s']*1e3:.1f}", f"{rf['memory_s']*1e3:.1f}",
+            f"{rf['collective_s']*1e3:.1f}", rf["dominant"],
+            f"{rf['useful_ratio']:.3f}" if rf["useful_ratio"] else "-",
+            f"{r['memory'].get('temp_bytes', 0)/2**30:.1f}",
+            f"{r['compile_s']:.0f}",
+        ])
+    header = ["arch", "shape", "mode", "compute_ms", "memory_ms",
+              "collective_ms", "dominant", "useful", "temp_GiB", "compile_s"]
+    if markdown:
+        print("| " + " | ".join(header) + " |")
+        print("|" + "---|" * len(header))
+        for row in rows:
+            print("| " + " | ".join(row) + " |")
+    else:
+        print(",".join(header))
+        for row in rows:
+            print(",".join(row))
+    return rows
+
+
+def main():
+    recs = load()
+    md = "--markdown" in sys.argv
+    mesh = "multipod" if "--multipod" in sys.argv else "pod"
+    table(recs, mesh_filter=mesh, markdown=md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark orchestrator — one module per paper figure/table.
+
+Default (CI) mode runs the QUICK variants: every claim exercised end-to-end
+on CPU in minutes. ``--full`` reproduces the complete grids used for
+EXPERIMENTS.md (hours; run in the background). ``--only fig1`` selects one.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="fig1|fig2|fig3|fig4|fig5|theorem1|kernels|roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    os.makedirs("experiments", exist_ok=True)
+
+    from benchmarks import (fig1_depth_staleness, fig2_algorithms,
+                            fig3_mf_lda_vae, fig4_coherence,
+                            fig5_coherence_depth, kernels_bench,
+                            theorem1_validation)
+
+    suite = {
+        "fig1": lambda: fig1_depth_staleness.main(quick=quick,
+                                                  out="experiments/fig1.json"),
+        "fig2": lambda: fig2_algorithms.main(quick=quick,
+                                             out="experiments/fig2.json"),
+        "fig3": lambda: fig3_mf_lda_vae.main(quick=quick,
+                                             out="experiments/fig3.json"),
+        "fig4": lambda: fig4_coherence.main(quick=quick,
+                                            out="experiments/fig4.json"),
+        "fig5": lambda: fig5_coherence_depth.main(quick=quick,
+                                                  out="experiments/fig5.json"),
+        "theorem1": lambda: theorem1_validation.main(
+            quick=quick, out="experiments/theorem1.json"),
+        "kernels": kernels_bench.main,
+    }
+    if os.path.exists("experiments/dryrun.jsonl"):
+        from benchmarks import roofline_report
+        suite["roofline"] = roofline_report.main
+
+    names = [args.only] if args.only else list(suite)
+    for name in names:
+        if name not in suite:
+            raise SystemExit(f"unknown benchmark {name!r}; have {list(suite)}")
+        t0 = time.time()
+        print(f"\n===== {name} ({'full' if args.full else 'quick'}) =====",
+              flush=True)
+        suite[name]()
+        print(f"===== {name} done in {time.time()-t0:.0f}s =====", flush=True)
+
+
+if __name__ == "__main__":
+    main()

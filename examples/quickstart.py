@@ -1,0 +1,48 @@
+"""Quickstart: the paper's staleness simulation in ~40 lines.
+
+Train the same DNN under s=0 (synchronous) and s=16 (stale) on 8 simulated
+workers and watch the convergence slowdown (paper Fig. 1).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import StalenessConfig, UniformDelay, init_sim_state, make_sim_step
+from repro.data import ShardedBatches, synthetic
+from repro.models import mlp
+from repro.optim import make_sgd_update_fn, paper_default
+
+
+def batches_to_target(staleness: int, workers: int = 8, target: float = 0.85):
+    data = synthetic.teacher_classification(seed=0)
+    cfg_model = mlp.MLPConfig(depth=1)
+    params = mlp.init(jax.random.PRNGKey(0), cfg_model)
+
+    opt = paper_default("sgd")                      # Table 1: eta = 0.01
+    update_fn = make_sgd_update_fn(mlp.loss_fn, opt)
+    cfg = StalenessConfig(num_workers=workers, delay=UniformDelay(staleness))
+
+    state = init_sim_state(params, opt.init(params), cfg, jax.random.PRNGKey(1))
+    step = jax.jit(make_sim_step(update_fn, cfg))
+
+    batches = ShardedBatches([data.x_train, data.y_train], workers, 32)
+    xt, yt = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    acc = jax.jit(lambda p: mlp.accuracy(p, xt, yt))
+
+    for t, batch in enumerate(batches):
+        state, _ = step(state, batch)
+        if (t + 1) % 25 == 0:
+            a = float(acc(jax.tree.map(lambda x: x[0], state.caches)))
+            if a >= target:
+                return (t + 1) * workers
+        if t > 4000:
+            break
+    return None
+
+
+if __name__ == "__main__":
+    sync = batches_to_target(0)
+    stale = batches_to_target(16)
+    print(f"batches to 85% accuracy:  s=0 -> {sync},  s=16 -> {stale}")
+    print(f"staleness slowdown: {stale / sync:.2f}x  (paper Fig. 1: 1-6x)")

@@ -1,0 +1,24 @@
+"""Serve a small model with batched requests: prefill + sampled decode.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-1.3b]
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch, "--reduced",
+                "--batch", str(args.batch), "--prompt-len", "64",
+                "--gen", str(args.gen)]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

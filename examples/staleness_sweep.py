@@ -1,0 +1,21 @@
+"""Mini reproduction of paper Fig. 2: algorithm sensitivity to staleness.
+
+Sweeps SGD vs Adam over staleness levels on the DNN and prints the
+normalized batches-to-target — SGD robust, Adam fragile.
+
+  PYTHONPATH=src python examples/staleness_sweep.py
+"""
+from benchmarks import common
+
+if __name__ == "__main__":
+    print("algo,staleness,batches_to_88%,normalized")
+    for algo in ["sgd", "adam"]:
+        base = None
+        for s in [0, 8, 16]:
+            r = common.dnn_experiment(depth=1, algo=algo, s=s, workers=8,
+                                      max_steps=3000)
+            btt = r.batches_to_target if r.converged else None
+            if s == 0:
+                base = btt
+            norm = f"{btt / base:.2f}" if (btt and base) else "diverged"
+            print(f"{algo},{s},{btt},{norm}")

@@ -1,0 +1,7 @@
+"""staleness-lab: staleness-aware distributed training framework in JAX.
+
+Reproduces and extends "Toward Understanding the Impact of Staleness in
+Distributed Machine Learning" (ICLR 2019). See DESIGN.md for the system map.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,240 @@
+"""Architecture registry: input shapes, the unified model API, and the
+ArchDef plumbing every assigned architecture plugs into.
+
+Each ``configs/<arch>.py`` defines exact full-scale settings (cited) plus a
+``reduced`` variant (<=2 layers, d_model <= 512, <= 4 experts) for CPU smoke
+tests. ``ModelAPI`` presents one interface over the four model families so
+the launcher/dry-run never special-cases architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# Sliding window applied to full-attention archs for long_500k (DESIGN.md §4).
+LONG_CTX_WINDOW = 8_192
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    """Uniform functional surface over all model families."""
+    family: str
+    cfg: Any
+    init: Callable          # key -> (params, axes)
+    loss: Callable          # (params, batch) -> scalar
+    prefill: Callable       # (params, batch) -> (logits, cache)
+    decode: Callable        # (params, token, cache, pos) -> (logits, cache)
+    init_cache: Callable    # (batch_size, seq_len) -> (cache, axes)
+    batch_spec: Callable    # (InputShape) -> dict[str, ShapeDtypeStruct]
+    batch_axes: Callable    # (InputShape) -> dict[str, tuple]  logical axes
+    vocab_real: int
+
+
+def _token_batch(shape: InputShape, extra: Optional[dict] = None,
+                 extra_axes: Optional[dict] = None):
+    spec = {"tokens": jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len + 1), jnp.int32)}
+    axes = {"tokens": ("batch", None)}
+    if extra:
+        spec.update(extra)
+        axes.update(extra_axes or {})
+    return spec, axes
+
+
+def transformer_api(cfg) -> ModelAPI:
+    from repro.models import transformer as tr
+
+    def prefill(params, batch):
+        out = tr.forward(params, batch["tokens"], cfg,
+                         cross_feats=batch.get("cross_feats"),
+                         return_cache=True)
+        logits, _aux, cache = out
+        return logits[:, -1:], cache
+
+    def batch_spec(shape: InputShape):
+        extra, eaxes = None, None
+        if cfg.num_cross_layers:
+            extra = {"cross_feats": jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.cross_tokens, cfg.cross_dim), cfg.dtype)}
+            eaxes = {"cross_feats": ("batch", None, None)}
+        n = shape.seq_len + 1 if shape.kind == "train" else shape.seq_len
+        spec = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, n), jnp.int32)}
+        axes = {"tokens": ("batch", None)}
+        if extra:
+            spec.update(extra)
+            axes.update(eaxes)
+        return spec, axes
+
+    return ModelAPI(
+        family="transformer", cfg=cfg,
+        init=lambda key: tr.init(key, cfg),
+        loss=lambda params, batch: tr.loss_fn(params, batch, cfg),
+        prefill=prefill,
+        decode=lambda params, token, cache, pos: tr.decode_step(
+            params, token, cache, pos, cfg),
+        init_cache=lambda b, s: tr.init_cache(cfg, b, s),
+        batch_spec=lambda shape: batch_spec(shape)[0],
+        batch_axes=lambda shape: batch_spec(shape)[1],
+        vocab_real=cfg.vocab_real,
+    )
+
+
+def ssm_api(cfg) -> ModelAPI:
+    from repro.models import ssm
+
+    def prefill(params, batch):
+        logits, cache = ssm.lm_forward(params, batch["tokens"], cfg,
+                                       return_cache=True)
+        return logits[:, -1:], cache
+
+    def decode(params, token, cache, pos):
+        logits, cache = ssm.lm_forward(params, token, cfg, cache=cache)
+        return logits, cache
+
+    def batch_spec(shape: InputShape):
+        n = shape.seq_len + 1 if shape.kind == "train" else shape.seq_len
+        return ({"tokens": jax.ShapeDtypeStruct((shape.global_batch, n), jnp.int32)},
+                {"tokens": ("batch", None)})
+
+    return ModelAPI(
+        family="ssm", cfg=cfg,
+        init=lambda key: ssm.lm_init(key, cfg),
+        loss=lambda params, batch: ssm.lm_loss(params, batch, cfg),
+        prefill=prefill,
+        decode=decode,
+        init_cache=lambda b, s: ssm.lm_cache_init(cfg, b),
+        batch_spec=lambda shape: batch_spec(shape)[0],
+        batch_axes=lambda shape: batch_spec(shape)[1],
+        vocab_real=cfg.vocab_real,
+    )
+
+
+def hybrid_api(cfg) -> ModelAPI:
+    from repro.models import hybrid
+
+    def prefill(params, batch):
+        logits, _aux, cache = hybrid.forward(params, batch["tokens"], cfg,
+                                             return_cache=True)
+        return logits[:, -1:], cache
+
+    def batch_spec(shape: InputShape):
+        n = shape.seq_len + 1 if shape.kind == "train" else shape.seq_len
+        return ({"tokens": jax.ShapeDtypeStruct((shape.global_batch, n), jnp.int32)},
+                {"tokens": ("batch", None)})
+
+    return ModelAPI(
+        family="hybrid", cfg=cfg,
+        init=lambda key: hybrid.init(key, cfg),
+        loss=lambda params, batch: hybrid.loss_fn(params, batch, cfg),
+        prefill=prefill,
+        decode=lambda params, token, cache, pos: hybrid.decode_step(
+            params, token, cache, pos, cfg),
+        init_cache=lambda b, s: hybrid.init_cache(cfg, b, s),
+        batch_spec=lambda shape: batch_spec(shape)[0],
+        batch_axes=lambda shape: batch_spec(shape)[1],
+        vocab_real=cfg.vocab_real,
+    )
+
+
+def encdec_api(cfg) -> ModelAPI:
+    from repro.models import encdec
+
+    def prefill(params, batch):
+        out = encdec.forward(params, batch["tokens"], batch["frames"], cfg,
+                             return_cache=True)
+        logits, _aux, cache = out
+        return logits[:, -1:], cache
+
+    def batch_spec(shape: InputShape):
+        n = shape.seq_len + 1 if shape.kind == "train" else shape.seq_len
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch, n), jnp.int32),
+            "frames": jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.num_frames, cfg.d_model), cfg.dtype),
+        }
+        axes = {"tokens": ("batch", None), "frames": ("batch", None, None)}
+        return spec, axes
+
+    return ModelAPI(
+        family="encdec", cfg=cfg,
+        init=lambda key: encdec.init(key, cfg),
+        loss=lambda params, batch: encdec.loss_fn(params, batch, cfg),
+        prefill=prefill,
+        decode=lambda params, token, cache, pos: encdec.decode_step(
+            params, token, cache, pos, cfg),
+        init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
+        batch_spec=lambda shape: batch_spec(shape)[0],
+        batch_axes=lambda shape: batch_spec(shape)[1],
+        vocab_real=cfg.vocab_real,
+    )
+
+
+_API_BUILDERS = {
+    "transformer": transformer_api,
+    "ssm": ssm_api,
+    "hybrid": hybrid_api,
+    "encdec": encdec_api,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    """One assigned architecture.
+
+    ``make_config(reduced, long_ctx)`` returns the family config;
+    ``long_ctx=True`` applies the sliding-window override used for
+    ``long_500k`` on otherwise full-attention architectures.
+    """
+    arch_id: str
+    family: str                 # transformer | ssm | hybrid | encdec
+    arch_type: str              # dense | moe | ssm | hybrid | audio | vlm
+    citation: str
+    make_config: Callable[..., Any]
+    notes: str = ""
+    train_optimizer: str = "adam"
+    stale_s_default: int = 4
+
+    def api(self, reduced: bool = False, long_ctx: bool = False,
+            overrides: Optional[dict] = None) -> ModelAPI:
+        cfg = self.make_config(reduced=reduced, long_ctx=long_ctx)
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        return _API_BUILDERS[self.family](cfg)
+
+
+def count_params(api: ModelAPI) -> int:
+    import math
+    shapes = jax.eval_shape(lambda k: api.init(k)[0], jax.random.PRNGKey(0))
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+
+def param_axes(api: ModelAPI):
+    """Logical-axes tree without materializing params (axes are static)."""
+    captured = {}
+
+    def go(k):
+        params, axes = api.init(k)
+        captured["axes"] = axes
+        return params
+
+    jax.eval_shape(go, jax.random.PRNGKey(0))
+    return captured["axes"]

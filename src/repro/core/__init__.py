@@ -1,0 +1,25 @@
+"""Core: the paper's staleness model, coherence theory, and SSP semantics."""
+from repro.core.delay import (
+    ConstantDelay,
+    DelayModel,
+    GeometricDelay,
+    UniformDelay,
+    matched_geometric,
+)
+from repro.core.staleness import (
+    SimState,
+    StalenessConfig,
+    drain,
+    draw_delay_matrix,
+    init_sim_state,
+    make_sim_step,
+    sequential_reference,
+)
+from repro.core.coherence import (
+    CoherenceController,
+    CoherenceState,
+    init_coherence,
+    observe,
+    probe_gradient,
+    theorem1_stepsize,
+)

@@ -1,0 +1,155 @@
+"""Gradient coherence (Definition 1) + the Theorem-1 stepsize, as runtime tools.
+
+The paper defines the coherence at iteration k as
+
+    mu_k = min_{k-s+1 <= t <= k} <gF(x_k), gF(x_t)> / ||gF(x_k)||^2
+
+and proves (Theorem 1) that Async-SGD with stepsize eta_k = mu / (s L sqrt(k))
+reaches min_k E||gF(x_k)||^2 <= (s L DeltaF / mu^2 + sigma^2 log T / s)/sqrt(T).
+
+Following the paper's footnote 6, coherence is estimated on a fixed probe
+batch: the monitor keeps a ring buffer of the last ``window`` probe gradients
+(flattened to fp32 vectors) and computes mu_k and the cosine-vs-lag profile
+(Figures 4 and 5) in one fused reduction (Pallas kernel, with a jnp fallback).
+
+Beyond the paper (DESIGN.md §8): ``CoherenceController`` turns mu_k from a
+diagnostic into a control law — when coherence degrades, shrink the effective
+staleness bound / stepsize; when it recovers, relax again.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import treemath as tm
+
+Pytree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CoherenceState:
+    history: jax.Array   # [window, dim] fp32 ring buffer of probe gradients
+    head: jax.Array      # int32: slot the *next* gradient will be written to
+    count: jax.Array     # int32: number of gradients seen so far
+
+
+def init_coherence(dim: int, window: int) -> CoherenceState:
+    return CoherenceState(
+        history=jnp.zeros((window, dim), jnp.float32),
+        head=jnp.int32(0),
+        count=jnp.int32(0),
+    )
+
+
+def observe(state: CoherenceState, grad_vec: jax.Array) -> Tuple[CoherenceState, dict]:
+    """Push the current probe gradient; return mu_k and the cosine profile.
+
+    ``cosines[m]`` is cos(g_k, g_{k-m}) for lag m = 1..window (NaN-free: lags
+    beyond ``count`` report 1.0 and are masked out of mu via +inf).
+    """
+    g = grad_vec.astype(jnp.float32)
+    window, _ = state.history.shape
+
+    dots = state.history @ g                                   # [window]
+    hist_sq = jnp.sum(state.history * state.history, axis=-1)  # [window]
+    g_sq = jnp.sum(g * g)
+
+    # slot -> lag: slot written j steps ago has lag j+1 relative to g_k.
+    slots = jnp.arange(window)
+    lag = (state.head - 1 - slots) % window + 1                # [window] in 1..window
+    valid = lag <= jnp.minimum(state.count, window)
+
+    coh = dots / jnp.maximum(g_sq, 1e-30)
+    mu_k = jnp.min(jnp.where(valid, coh, jnp.inf))
+    mu_k = jnp.where(jnp.any(valid), mu_k, 1.0)  # no history yet => neutral
+
+    cos = dots / jnp.maximum(jnp.sqrt(hist_sq * g_sq), 1e-30)
+    cos_by_lag = jnp.where(valid, cos, 1.0)[jnp.argsort(lag)]  # index m-1 = lag m
+
+    new_hist = jax.lax.dynamic_update_index_in_dim(state.history, g, state.head, 0)
+    new_state = CoherenceState(
+        history=new_hist,
+        head=(state.head + 1) % window,
+        count=state.count + 1,
+    )
+    return new_state, {"mu": mu_k, "cos_by_lag": cos_by_lag, "grad_norm": jnp.sqrt(g_sq)}
+
+
+def probe_gradient(loss_fn, params: Pytree, probe_batch) -> jax.Array:
+    """gF on a fixed probe set (paper Fig. 4: 1000 held-out training samples)."""
+    g = jax.grad(loss_fn)(params, probe_batch)
+    return tm.tree_flatten_to_vector(g)
+
+
+def theorem1_stepsize(mu: jax.Array, s: int, lipschitz: jax.Array, k: jax.Array):
+    """eta_k = mu / (s L sqrt(k)) (Theorem 1), guarded for k=0 and mu<=0."""
+    mu_pos = jnp.maximum(mu, 1e-8)
+    return mu_pos / (max(s, 1) * jnp.maximum(lipschitz, 1e-8) * jnp.sqrt(jnp.maximum(k, 1)))
+
+
+def optimal_staleness(mu, sigma, lipschitz, delta_f, horizon):
+    """s* = sigma * mu * sqrt(log T / (L * DeltaF)) — the staleness that
+    minimizes the Theorem-1 bound (Section 5)."""
+    return sigma * mu * jnp.sqrt(jnp.log(jnp.maximum(horizon, 2)) /
+                                 jnp.maximum(lipschitz * delta_f, 1e-30))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SecantLipschitz:
+    """Online L estimate: L_hat = max_k ||g_k - g_{k-1}|| / ||x_k - x_{k-1}||."""
+    prev_g: jax.Array
+    prev_x: jax.Array
+    l_hat: jax.Array
+    seen: jax.Array
+
+
+def init_secant(dim: int) -> SecantLipschitz:
+    return SecantLipschitz(
+        prev_g=jnp.zeros((dim,), jnp.float32),
+        prev_x=jnp.zeros((dim,), jnp.float32),
+        l_hat=jnp.float32(1.0),
+        seen=jnp.bool_(False),
+    )
+
+
+def update_secant(st: SecantLipschitz, x_vec, g_vec) -> SecantLipschitz:
+    dx = jnp.linalg.norm(x_vec - st.prev_x)
+    dg = jnp.linalg.norm(g_vec - st.prev_g)
+    est = dg / jnp.maximum(dx, 1e-12)
+    l_new = jnp.where(st.seen, jnp.maximum(st.l_hat * 0.9, est), st.l_hat)
+    return SecantLipschitz(prev_g=g_vec, prev_x=x_vec, l_hat=l_new, seen=jnp.bool_(True))
+
+
+@dataclasses.dataclass(frozen=True)
+class CoherenceController:
+    """Beyond-paper: coherence-gated synchronization.
+
+    While mu_k >= hi the full staleness bound ``s_max`` is allowed; if mu_k
+    drops below lo, the controller halves the allowed bound (repeatedly, down
+    to 0 == synchronous); it relaxes back one notch per ``patience`` healthy
+    steps. Pure function of (mu_k, ctl_state) so it jits into the train loop.
+    """
+    s_max: int
+    lo: float = 0.0
+    hi: float = 0.25
+    patience: int = 20
+
+    def init(self):
+        return {"allowed_s": jnp.int32(self.s_max), "healthy": jnp.int32(0)}
+
+    def step(self, ctl, mu_k):
+        unhealthy = mu_k < self.lo
+        healthy_cnt = jnp.where(mu_k >= self.hi, ctl["healthy"] + 1, jnp.int32(0))
+        shrunk = jnp.maximum(ctl["allowed_s"] // 2, 0)
+        relax = jnp.minimum(ctl["allowed_s"] + 1, self.s_max)
+        allowed = jnp.where(
+            unhealthy, shrunk,
+            jnp.where(healthy_cnt >= self.patience, relax, ctl["allowed_s"]),
+        )
+        healthy_cnt = jnp.where(healthy_cnt >= self.patience, 0, healthy_cnt)
+        return {"allowed_s": allowed, "healthy": healthy_cnt}

@@ -1,0 +1,227 @@
+"""The paper's staleness simulation model, as a composable JAX engine.
+
+Semantics (Section 3 of the paper):
+  * ``P`` workers each hold a full *model cache* ``x_p``.
+  * At iteration ``t`` every worker computes an additive update ``u_p^t`` from
+    its own cache (SGD-family step, Gibbs count delta, blackbox-VI step, ...).
+  * The update is delivered to every worker ``p'`` (including ``p`` itself) at
+    the start of iteration ``t + 1 + r_{p,p'}^t`` with ``r`` drawn from the
+    configured delay model.
+  * Evaluation reads worker 0's cache (caches are symmetric).
+
+Implementation: caches are stacked on a leading worker axis ``[P, ...]`` and
+in-flight updates live in a delivery ring buffer ``pending`` with leaves
+``[P, B, ...]`` where ``B = delay.bound + 1``; slot ``d`` of worker ``p`` holds
+the sum of updates scheduled to land on ``p`` in ``d + 1`` iterations. One
+engine step is:
+
+  1. deliver   -- ``caches[p] += pending[p, 0]``; roll the buffer left.
+  2. compute   -- ``vmap`` the user's ``update_fn`` over the worker axis.
+  3. dispatch  -- sample the delay matrix ``r[src, dst]`` and scatter each
+                  update into ``pending[dst, r[src, dst]]`` (a one-hot einsum,
+                  which under GSPMD lowers to a single all-gather when the
+                  worker axis is sharded over the mesh's ``data`` axis).
+
+Because the whole engine is pure array math over the leading worker axis, the
+*same* code is the single-host simulator (paper's setting) and the distributed
+implementation: sharding ``[P, ...]`` over ``("pod", "data")`` makes GSPMD
+insert the collectives, which is exactly what the roofline analysis measures.
+
+The engine is generic over *additive updates*; adaptive optimizers can live
+either worker-side (their state rides in ``update_state``, the paper's implied
+setting) or server-side (``server_apply`` transforms the *arrived* aggregate;
+see DESIGN.md §8.3 for the ablation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import treemath as tm
+from repro.core.delay import DelayModel, UniformDelay
+
+Pytree = Any
+# update_fn(params, update_state, batch, key) -> (update, new_update_state, metrics)
+UpdateFn = Callable[[Pytree, Pytree, Pytree, jax.Array], Tuple[Pytree, Pytree, dict]]
+# server_apply(cache, server_state, arrived) -> (new_cache, new_server_state)
+ServerApply = Callable[[Pytree, Pytree, Pytree], Tuple[Pytree, Pytree]]
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessConfig:
+    num_workers: int
+    delay: DelayModel
+    # Apply delivered aggregates through a server-side transform instead of
+    # plain addition (ablation: where does Adam state live?).
+    server_side: bool = False
+
+    @property
+    def buffer_slots(self) -> int:
+        return self.delay.bound + 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    caches: Pytree        # [P, ...] per-worker model caches
+    pending: Pytree       # [P, B, ...] delivery ring buffer (slot 0 = next)
+    update_state: Pytree  # [P, ...] per-worker algorithm state (opt moments, z's, ...)
+    server_state: Pytree  # [P, ...] per-worker server-side transform state (or ())
+    step: jax.Array       # scalar int32 iteration counter
+    key: jax.Array        # PRNG key threaded through delay + update sampling
+
+
+def init_sim_state(
+    params: Pytree,
+    update_state: Pytree,
+    cfg: StalenessConfig,
+    key: jax.Array,
+    server_state: Pytree = (),
+) -> SimState:
+    """All workers start from identical ``params``; buffers start empty.
+
+    ``update_state``/``server_state`` are given *per single worker* and are
+    broadcast across the worker axis.
+    """
+    p = cfg.num_workers
+    caches = tm.tree_broadcast_leading(params, p)
+    pending = jax.tree.map(
+        lambda x: jnp.zeros((p, cfg.buffer_slots) + x.shape, x.dtype), params
+    )
+    return SimState(
+        caches=caches,
+        pending=pending,
+        update_state=tm.tree_broadcast_leading(update_state, p),
+        server_state=tm.tree_broadcast_leading(server_state, p)
+        if server_state != ()
+        else (),
+        step=jnp.int32(0),
+        key=key,
+    )
+
+
+def draw_delay_matrix(key: jax.Array, delay: DelayModel, p: int) -> jax.Array:
+    """``r[src, dst]`` — shared helper so the simulator and the distributed
+    faithful mode draw *identical* delays from the same key (tested)."""
+    return delay.sample(key, (p, p))
+
+
+def _deliver(caches: Pytree, pending: Pytree) -> Tuple[Pytree, Pytree]:
+    new_caches = jax.tree.map(lambda c, b: c + b[:, 0].astype(c.dtype), caches, pending)
+    rolled = jax.tree.map(
+        lambda b: jnp.concatenate([b[:, 1:], jnp.zeros_like(b[:, :1])], axis=1), pending
+    )
+    return new_caches, rolled
+
+
+def _dispatch(pending: Pytree, updates: Pytree, delays: jax.Array, slots: int) -> Pytree:
+    # onehot[src, dst, slot] routes update[src] into pending[dst, slot].
+    onehot = jax.nn.one_hot(delays, slots, dtype=jnp.float32)  # [P, P, B]
+    def scatter(buf, u):
+        acc = jnp.tensordot(onehot, u.astype(jnp.float32), axes=([0], [0]))  # [P,B,...]
+        return buf + acc.astype(buf.dtype)
+    return jax.tree.map(scatter, pending, updates)
+
+
+def make_sim_step(
+    update_fn: UpdateFn,
+    cfg: StalenessConfig,
+    server_apply: Optional[ServerApply] = None,
+):
+    """Build one jit-able engine step: ``step(state, batches) -> (state, metrics)``.
+
+    ``batches`` must have a leading worker axis of size ``P`` on every leaf
+    (each worker consumes its own data shard, as in the paper).
+    """
+    if cfg.server_side and server_apply is None:
+        raise ValueError("server_side=True requires a server_apply transform")
+
+    def step(state: SimState, batches: Pytree) -> Tuple[SimState, dict]:
+        key, kdelay, kupd = jax.random.split(state.key, 3)
+
+        # 1. deliver arrivals scheduled for this iteration.
+        if cfg.server_side:
+            arrived = jax.tree.map(lambda b: b[:, 0], state.pending)
+            caches, server_state = jax.vmap(server_apply)(
+                state.caches, state.server_state, arrived
+            )
+            pending = jax.tree.map(
+                lambda b: jnp.concatenate([b[:, 1:], jnp.zeros_like(b[:, :1])], axis=1),
+                state.pending,
+            )
+        else:
+            caches, pending = _deliver(state.caches, state.pending)
+            server_state = state.server_state
+
+        # 2. every worker computes its update from its own (stale) cache.
+        worker_keys = jax.random.split(kupd, cfg.num_workers)
+        updates, update_state, metrics = jax.vmap(update_fn)(
+            caches, state.update_state, batches, worker_keys
+        )
+
+        # 3. dispatch into the delivery buffer with sampled delays.
+        delays = draw_delay_matrix(kdelay, cfg.delay, cfg.num_workers)
+        pending = _dispatch(pending, updates, delays, cfg.buffer_slots)
+
+        new_state = SimState(
+            caches=caches,
+            pending=pending,
+            update_state=update_state,
+            server_state=server_state,
+            step=state.step + 1,
+            key=key,
+        )
+        return new_state, metrics
+
+    return step
+
+
+def drain(state: SimState, server_apply: Optional[ServerApply] = None,
+          server_side: bool = False) -> SimState:
+    """Deliver every in-flight update without generating new ones.
+
+    Used by the conservation property test: after draining, every cache equals
+    ``x0 + sum of all generated updates`` (all caches identical).
+    """
+    slots = jax.tree.leaves(state.pending)[0].shape[1]
+    caches, pending, server_state = state.caches, state.pending, state.server_state
+    for _ in range(slots):
+        if server_side:
+            arrived = jax.tree.map(lambda b: b[:, 0], pending)
+            caches, server_state = jax.vmap(server_apply)(caches, server_state, arrived)
+            pending = jax.tree.map(
+                lambda b: jnp.concatenate([b[:, 1:], jnp.zeros_like(b[:, :1])], axis=1),
+                pending,
+            )
+        else:
+            caches, pending = _deliver(caches, pending)
+    return dataclasses.replace(
+        state, caches=caches, pending=pending, server_state=server_state
+    )
+
+
+def sequential_reference(
+    update_fn: UpdateFn,
+    params: Pytree,
+    update_state: Pytree,
+    batches_per_step,
+    keys,
+) -> Pytree:
+    """Plain sequential execution (the s=0, P=1 limit) for exactness tests."""
+    x, ust = params, update_state
+    for batch, key in zip(batches_per_step, keys):
+        u, ust, _ = update_fn(x, ust, batch, key)
+        x = tm.tree_add(x, u)
+    return x
+
+
+def effective_staleness_histogram(delay: DelayModel, key: jax.Array,
+                                  p: int, steps: int) -> jax.Array:
+    """Empirical distribution of total delay (1 + r) — diagnostic used by the
+    EXPERIMENTS.md §Repro delay-model calibration plot."""
+    keys = jax.random.split(key, steps)
+    draws = jax.vmap(lambda k: delay.sample(k, (p, p)))(keys)
+    return jnp.bincount((draws + 1).reshape(-1), length=delay.bound + 2)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import ShardedBatches, epoch_batches, partitioned_static
+from repro.data import synthetic

@@ -1,0 +1,50 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; the kernel bodies
+execute in Python for validation). On a real TPU deployment set
+``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False) and the same
+BlockSpecs compile to Mosaic. Shapes that violate a kernel's divisibility
+contract fall back to the ref oracle (pad-free correctness beats a fast path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_adam as _fa
+from repro.kernels import coherence as _co
+from repro.kernels import flash_attention as _fl
+from repro.kernels import ref
+from repro.kernels import stale_accum as _sa
+
+INTERPRET = True
+
+
+def stale_accum(params, buffer, weights, block_d: int = 1024):
+    d = params.shape[-1]
+    if d % block_d:
+        return ref.stale_accum(params, buffer, weights)
+    return _sa.stale_accum(params, buffer, weights, block_d=block_d,
+                           interpret=INTERPRET)
+
+
+def coherence_dots(history, g, block_d: int = 2048):
+    d = g.shape[-1]
+    if d % block_d:
+        return ref.coherence_dots(history, g)
+    return _co.coherence_dots(history, g, block_d=block_d, interpret=INTERPRET)
+
+
+def fused_adam(p, m, v, g, lr, b1=0.9, b2=0.999, eps=1e-8, step=1,
+               block_d: int = 2048):
+    d = p.shape[-1]
+    if d % block_d:
+        return ref.fused_adam(p, m, v, g, lr, b1, b2, eps, step)
+    return _fa.fused_adam(p, m, v, g, lr, b1, b2, eps, step, block_d=block_d,
+                          interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128):
+    return _fl.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=INTERPRET)

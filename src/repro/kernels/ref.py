@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stale_accum(params: jax.Array, buffer: jax.Array, weights: jax.Array) -> jax.Array:
+    """params [D] + sum_s weights[s] * buffer[s, D] (fp32 accumulation)."""
+    acc = jnp.einsum("s,sd->d", weights.astype(jnp.float32),
+                     buffer.astype(jnp.float32))
+    return (params.astype(jnp.float32) + acc).astype(params.dtype)
+
+
+def coherence_dots(history: jax.Array, g: jax.Array):
+    """history [W, D], g [D] -> (dots [W], hist_sq [W], g_sq []). fp32."""
+    h32 = history.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    dots = h32 @ g32
+    hist_sq = jnp.sum(h32 * h32, axis=-1)
+    g_sq = jnp.sum(g32 * g32)
+    return dots, hist_sq, g_sq
+
+
+def fused_adam(p, m, v, g, lr, b1, b2, eps, step):
+    """One Adam step with bias correction; returns (p', m', v'). fp32 math."""
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+    v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+    update = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    p_new = p.astype(jnp.float32) - update
+    return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """Naive attention oracle. q [B,Sq,H,hd], k/v [B,Sk,Hkv,hd]; GQA via
+    head grouping. window > 0 = sliding window (implies causal semantics
+    with q offset Sk - Sq, i.e. q block ends at kv position Sk-1)."""
+    b, sq, h, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    scale = scale or (1.0 / jnp.sqrt(hd))
+    qg = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bsngd,bknd->bngsk", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal or window:
+        mask = k_pos <= q_pos
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngsk,bknd->bsngd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination on 512 placeholder host devices, prove the sharding config
+is coherent, and extract the roofline terms (EXPERIMENTS.md §Dry-run).
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and only the dry-run wants 512 devices (smoke tests/benches see 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--stale 4]
+Results append to experiments/dryrun.jsonl (idempotent per key).
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfglib
+from repro.configs.base import SHAPES, count_params
+from repro.launch import hlo_analysis, steps
+from repro.launch.mesh import make_production_mesh
+
+OUT_DEFAULT = "experiments/dryrun.jsonl"
+
+
+def active_params(arch_id: str) -> int:
+    """Active (per-token) parameter count — 6*N_active*D for MoE rooflines."""
+    arch = cfglib.get(arch_id)
+    api = arch.api()
+    total = count_params(api)
+    cfg = api.cfg
+    moe = getattr(cfg, "moe", None)
+    if not moe:
+        return total
+    per_expert = 3 * cfg.d_model * moe.d_ff
+    routed_total = cfg.num_layers * moe.num_experts * per_expert
+    routed_active = cfg.num_layers * moe.top_k * per_expert
+    return total - routed_total + routed_active
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool,
+            stale_s=None, remat=None, optimizer=None,
+            overrides=None, tag="") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    shape = SHAPES[shape_name]
+
+    kw = {"overrides": overrides}
+    if shape.kind == "train":
+        kw.update({"stale_s": stale_s, "remat_override": remat,
+                   "optimizer_name": optimizer})
+    built = steps.build(arch_id, shape_name, mesh, **kw)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(
+            built.fn,
+            in_shardings=built.in_shardings,
+            out_shardings=built.out_shardings,
+        ).lower(*built.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = hlo_analysis.memory_summary(compiled)
+    hlo_text = compiled.as_text()
+
+    n_total = count_params(cfglib.get(arch_id).api())
+    n_active = active_params(arch_id)
+    if shape.kind == "train":
+        # 6·N_active·D already counts fwd (2ND) + bwd (4ND).
+        mf = hlo_analysis.train_model_flops(
+            n_total, shape.global_batch * shape.seq_len, active_params=n_active)
+    elif shape.kind == "prefill":
+        mf = 2.0 * n_active * shape.global_batch * shape.seq_len
+    else:
+        mf = hlo_analysis.decode_model_flops(n_total, shape.global_batch,
+                                             active_params=n_active)
+
+    roof = hlo_analysis.roofline(compiled, chips=chips, hlo_text=hlo_text,
+                                 model_flops=mf)
+
+    record = {
+        "key": f"{arch_id}|{shape_name}|{'multipod' if multi_pod else 'pod'}"
+               f"|{built.meta.get('mode', shape.kind)}"
+               + (f"|{tag}" if tag else ""),
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "chips": chips,
+        "meta": built.meta,
+        "params_total": n_total,
+        "params_active": n_active,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "roofline": roof.to_dict(),
+        "ok": True,
+    }
+    print(f"== {record['key']} ==")
+    print(f"  params {n_total/1e9:.2f}B (active {n_active/1e9:.2f}B)  "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    print(f"  memory_analysis: {mem}")
+    print(f"  cost: flops={roof.flops:.3e} bytes={roof.hbm_bytes:.3e} "
+          f"coll={roof.coll_bytes:.3e} ({roof.coll_breakdown})")
+    print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+          f"memory={roof.memory_s*1e3:.2f}ms "
+          f"collective={roof.collective_s*1e3:.2f}ms -> {roof.dominant}-bound; "
+          f"useful_ratio={roof.useful_ratio if roof.useful_ratio is None else round(roof.useful_ratio, 3)}")
+    return record
+
+
+def load_done(path: str) -> set:
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                    if rec.get("ok"):
+                        done.add(rec["key"])
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--stale", type=int, default=None,
+                    help="staleness bound for train steps (default: sync baseline)")
+    ap.add_argument("--remat", type=lambda s: s == "true", default=None)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--out", default=OUT_DEFAULT)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set() if args.force else load_done(args.out)
+
+    archs = cfglib.list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+
+    failures = []
+    with open(args.out, "a") as f:
+        for arch_id in archs:
+            for shape_name in shapes:
+                for mp in meshes:
+                    mode = (f"stale_psum(s={args.stale})"
+                            if (args.stale and SHAPES[shape_name].kind == "train")
+                            else SHAPES[shape_name].kind if SHAPES[shape_name].kind != "train"
+                            else "sync")
+                    key = (f"{arch_id}|{shape_name}|{'multipod' if mp else 'pod'}"
+                           f"|{mode}")
+                    if key in done:
+                        print(f"-- skip (done): {key}")
+                        continue
+                    try:
+                        rec = run_one(arch_id, shape_name, mp,
+                                      stale_s=args.stale, remat=args.remat,
+                                      optimizer=args.optimizer)
+                    except Exception as e:  # noqa: BLE001
+                        traceback.print_exc()
+                        rec = {"key": key, "arch": arch_id, "shape": shape_name,
+                               "ok": False, "error": f"{type(e).__name__}: {e}"}
+                        failures.append(key)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+
+    if failures:
+        print(f"\nFAILURES ({len(failures)}):")
+        for k in failures:
+            print(" ", k)
+        raise SystemExit(1)
+    print("\nall dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes by ~the layer count
+(demonstrated in EXPERIMENTS.md §Dry-run methodology). This module walks the
+optimized HLO text, builds the computation call graph, and accumulates
+
+  * dot/convolution FLOPs,
+  * an HBM-traffic estimate (operand + result bytes of non-fused ops;
+    fusion internals are free, matching XLA's own model),
+  * collective payload bytes per kind,
+
+multiplying ``while`` bodies by their trip count (recovered from the loop
+condition's comparison constant) and fusions/calls by one. Every model in
+this framework builds its layer stacks as scans with static trip counts, so
+the recovery is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "  %name = <type> opcode(operands...) , attrs". The type may be a tuple
+# containing comments like /*index=5*/; the opcode is the first `word(`.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_dims(type_str: str):
+    """All array shapes in a (possibly tuple) type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",")] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(s) for dt, s in _shape_dims(type_str))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str       # operand list + attributes (raw tail of the line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    shapes: Dict[str, str]  # value name -> type string
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip()) if "{" in line and "->" in line else None
+            if m:
+                cur = Computation(m.group(1), [], {})
+            continue
+        stripped = line.strip()
+        if stripped == "}" or stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            cur.instrs.append(Instr(name, type_str, opcode, rest))
+            cur.shapes[name] = type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation's comparison constant."""
+    consts = []
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            cm = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            if cm:
+                consts.append(int(cm.group(1)))
+    return max(consts) if consts else 1
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    result_elems = sum(math.prod(s) for _, s in _shape_dims(ins.type_str))
+    lhs_m = _OPERAND_RE.search(ins.rest)
+    if not lhs_m:
+        return 0.0
+    lhs_type = comp.shapes.get(lhs_m.group(1))
+    if lhs_type is None:
+        return 0.0
+    lhs_shapes = _shape_dims(lhs_type)
+    if not lhs_shapes:
+        return 0.0
+    lhs_shape = lhs_shapes[0][1]
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contract = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            contract *= lhs_shape[int(d)]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    """2 * out_elems * (kernel spatial * in_channels)."""
+    result_elems = sum(math.prod(s) for _, s in _shape_dims(ins.type_str))
+    ops = _OPERAND_RE.findall(ins.rest)
+    if len(ops) < 2:
+        return 0.0
+    rhs_type = comp.shapes.get(ops[1])
+    if rhs_type is None:
+        return 0.0
+    shp = _shape_dims(rhs_type)
+    if not shp:
+        return 0.0
+    kernel = shp[0][1]
+    if not kernel:
+        return 0.0
+    # HWIO layout: all but the last dim contribute to the per-output MACs.
+    macs = math.prod(kernel[:-1]) if len(kernel) > 1 else kernel[0]
+    return 2.0 * result_elems * macs
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in _COLLECTIVES}
+
+    def add(self, other: "Costs", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * times
+
+
+def analyze(text: str) -> Costs:
+    comps = parse_module(text)
+    memo: Dict[str, Costs] = {}
+
+    def cost_of(name: str, count_bytes: bool = True) -> Costs:
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        memo[key] = Costs()  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        total = Costs()
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                total.flops += _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                total.flops += _conv_flops(ins, comp)
+
+            if ins.opcode == "while":
+                body_m = _CALLED_RE.search(ins.rest)
+                cond_m = _COND_RE.search(ins.rest)
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = 1
+                    if cond_m and cond_m.group(1) in comps:
+                        trip = max(_trip_count(comps[cond_m.group(1)]), 1)
+                if body_m:
+                    total.add(cost_of(body_m.group(1), count_bytes), times=trip)
+                continue
+            if ins.opcode == "conditional":
+                bm = _BRANCHES_RE.search(ins.rest)
+                if bm:
+                    branches = [_b.strip().lstrip("%") for _b in bm.group(1).split(",")]
+                    sub = [cost_of(b, count_bytes) for b in branches if b in comps]
+                    if sub:
+                        # executed once; take the max-cost branch (upper bound)
+                        best = max(sub, key=lambda c: c.flops + c.bytes)
+                        total.add(best)
+                continue
+            called = _CALLED_RE.search(ins.rest)
+            if called and ins.opcode in ("fusion", "call", "custom-call",
+                                         "reduce", "sort", "map", "scatter",
+                                         "select-and-scatter", "reduce-window"):
+                # fusion internals never touch HBM: recurse for flops only.
+                total.add(cost_of(called.group(1), count_bytes=False))
+
+            # HBM traffic: count operand + result bytes at graph boundaries.
+            # dynamic-(update-)slice run in place: only the slice moves
+            # (XLA's bytes-accessed notoriously overcounts these).
+            if count_bytes and ins.opcode not in _SKIP_BYTES_OPS:
+                op_names = _OPERAND_RE.findall(ins.rest.split("),")[0])
+                if ins.opcode == "dynamic-update-slice" and len(op_names) >= 2:
+                    upd = comp.shapes.get(op_names[1])
+                    total.bytes += 2 * _type_bytes(upd) if upd else 0
+                elif ins.opcode == "dynamic-slice":
+                    total.bytes += 2 * _type_bytes(ins.type_str)
+                else:
+                    total.bytes += _type_bytes(ins.type_str)
+                    for op_name in op_names:
+                        t = comp.shapes.get(op_name)
+                        if t:
+                            total.bytes += _type_bytes(t)
+
+            for c in _COLLECTIVES:
+                if ins.opcode == c or ins.opcode == c + "-start":
+                    total.coll[c] += _type_bytes(ins.type_str)
+        memo[key] = total
+        return total
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda n: len(comps[n].instrs)) if comps else ""
+    return cost_of(entry)

@@ -1,0 +1,34 @@
+"""Production mesh construction (TPU v5e pods; host-device dry-run on CPU).
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(the dry-run sets XLA_FLAGS before any jax init; smoke tests see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (CPU host testing)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_extent(mesh) -> int:
+    """Total data-parallel worker count (pods x data)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)
+
+
+def model_extent(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("model", 1)

@@ -1,0 +1,91 @@
+"""Serving driver: batched prefill + decode for any registered architecture.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --reduced \
+      --batch 8 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfglib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = cfglib.get(args.arch)
+    api = arch.api(reduced=args.reduced)
+    cfg = api.cfg
+    params, _ = api.init(jax.random.PRNGKey(args.seed))
+
+    rng = np.random.default_rng(args.seed)
+    total = args.prompt_len + args.gen
+    tokens = jnp.asarray(rng.integers(0, api.vocab_real,
+                                      (args.batch, args.prompt_len), dtype=np.int32))
+    batch = {"tokens": tokens}
+    if getattr(cfg, "num_cross_layers", 0) and api.family == "transformer":
+        batch["cross_feats"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.cross_tokens, cfg.cross_dim)).astype(np.float32))
+    if api.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.num_frames, cfg.d_model)).astype(np.float32))
+
+    # Prefill into a cache sized for the full request.
+    t0 = time.time()
+    cache_full, _ = api.init_cache(args.batch, total)
+    logits, cache = api.prefill(params, batch)
+
+    def graft(dst, src):
+        if isinstance(dst, dict):
+            return {k: graft(dst[k], src[k]) for k in dst}
+        if dst.shape == src.shape:
+            return src
+        sl = tuple(slice(0, d) for d in src.shape)
+        return jnp.asarray(dst).at[sl].set(src)
+
+    try:
+        cache = graft(cache_full, cache)
+    except Exception:
+        pass  # SSM caches are length-independent
+    prefill_s = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in {prefill_s:.2f}s "
+          f"({args.batch*args.prompt_len/prefill_s:.0f} tok/s)")
+
+    decode = jax.jit(api.decode)
+    key = jax.random.PRNGKey(args.seed)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, cache = decode(params, tok, cache, pos)
+        key, k = jax.random.split(key)
+        if args.temperature > 0:
+            tok = jax.random.categorical(
+                k, logits[:, 0] / args.temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dec_s = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decode: {args.gen} steps x batch {args.batch} in {dec_s:.2f}s "
+          f"({args.batch*args.gen/dec_s:.0f} tok/s)")
+    print("sample row 0:", np.asarray(out[0])[:24].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: the paper's six families + the production architectures."""

@@ -1,0 +1,120 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the brief, the mel-spectrogram + conv feature extractor is a STUB: the
+model consumes precomputed frame embeddings [B, num_frames, d_model] (the
+output the conv frontend would produce). The encoder is a bidirectional
+transformer; the decoder is a causal transformer with cross-attention to the
+encoder output on EVERY layer (cross_attn_period=1). RoPE/RMSNorm replace
+Whisper's learned-positional/LayerNorm (TPU-native simplification, DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as tr
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    num_layers: int           # per stack (encoder and decoder each)
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    vocab_real: int
+    num_frames: int = 1500    # encoder sequence length (audio frames)
+    tp: int = 16
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    norm_eps: float = 1e-6
+    remat: bool = True
+
+    def encoder_cfg(self) -> tr.TransformerConfig:
+        return tr.TransformerConfig(
+            name=self.name + "-enc", num_layers=self.num_layers,
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
+            d_ff=self.d_ff, vocab=self.vocab, vocab_real=self.vocab_real,
+            causal=False, tp=self.tp, dtype=self.dtype,
+            param_dtype=self.param_dtype, norm_eps=self.norm_eps,
+            remat=self.remat)
+
+    def decoder_cfg(self) -> tr.TransformerConfig:
+        return tr.TransformerConfig(
+            name=self.name + "-dec", num_layers=self.num_layers,
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
+            d_ff=self.d_ff, vocab=self.vocab, vocab_real=self.vocab_real,
+            causal=True, cross_attn_period=1, cross_tokens=self.num_frames,
+            cross_dim=self.d_model, tp=self.tp, dtype=self.dtype,
+            param_dtype=self.param_dtype, norm_eps=self.norm_eps,
+            remat=self.remat)
+
+
+def init(key, cfg: EncDecConfig) -> Tuple[Any, Any]:
+    ke, kd = jax.random.split(key)
+    ecfg, dcfg = cfg.encoder_cfg(), cfg.decoder_cfg()
+    enc_params, enc_axes = tr.init(ke, ecfg)
+    dec_params, dec_axes = tr.init(kd, dcfg)
+    # The encoder consumes frame embeddings, not tokens: drop its embed/head.
+    del enc_params["embed"], enc_params["head"]
+    del enc_axes["embed"], enc_axes["head"]
+    return ({"encoder": enc_params, "decoder": dec_params},
+            {"encoder": enc_axes, "decoder": dec_axes})
+
+
+def encode(params, frames, cfg: EncDecConfig) -> jax.Array:
+    """frames [B, num_frames, d_model] -> encoder states (bidirectional)."""
+    ecfg = cfg.encoder_cfg()
+    enc = params["encoder"]
+    b, s, _ = frames.shape
+    h = frames.astype(ecfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, layer_p):
+        h = carry
+
+        def run(h):
+            out, _, _ = tr._layer_body(h, layer_p, positions, ecfg)
+            return out
+
+        run = jax.checkpoint(run) if ecfg.remat else run
+        return run(h), None
+
+    h, _ = jax.lax.scan(body, h, enc["layers"])
+    return L.rms_norm(h, enc["final_ln"], ecfg.norm_eps)
+
+
+def forward(params, tokens, frames, cfg: EncDecConfig, return_cache=False):
+    """Teacher-forced decode over the full target sequence."""
+    enc_states = encode(params, frames, cfg)
+    dcfg = cfg.decoder_cfg()
+    return tr.forward(params["decoder"], tokens, dcfg,
+                      cross_feats=enc_states, return_cache=return_cache)
+
+
+def init_cache(cfg: EncDecConfig, batch: int, seq_len: int):
+    return tr.init_cache(cfg.decoder_cfg(), batch, seq_len)
+
+
+def decode_step(params, token, cache, pos, cfg: EncDecConfig):
+    """One decoder token; encoder states live in the (cross) cache."""
+    return tr.decode_step(params["decoder"], token, cache, pos, cfg.decoder_cfg())
+
+
+def loss_fn(params, batch, cfg: EncDecConfig):
+    """batch: {"tokens": [B, S+1], "frames": [B, num_frames, d_model]}."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(params, inputs, batch["frames"], cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux

@@ -1,0 +1,103 @@
+"""Common layer building blocks with logical-axis tracking.
+
+Params are built as nested dicts whose leaves are ``Param(value, axes)``;
+``unzip`` splits one tree into (values, axes) so the sharding rules can map
+every leaf to a PartitionSpec without a hand-maintained mirror structure.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Param(NamedTuple):
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip(tree: Any) -> Tuple[Any, Any]:
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def dense_init(key, shape, axes, in_axis: int = 0, scale: float = 1.0,
+               dtype=jnp.float32) -> Param:
+    """Truncated-normal fan-in init; ``in_axis`` marks the contraction dim(s)
+    used for the fan-in computation (negative counts from the end)."""
+    fan_in = shape[in_axis]
+    std = scale / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+    return Param(w.astype(dtype), axes)
+
+
+def embed_init(key, shape, axes, dtype=jnp.float32) -> Param:
+    w = jax.random.normal(key, shape, jnp.float32) * 0.02
+    return Param(w.astype(dtype), axes)
+
+
+def scale_init(shape, axes, value: float = 1.0, dtype=jnp.float32) -> Param:
+    return Param(jnp.full(shape, value, dtype), axes)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = x32.mean(axis=-1, keepdims=True)
+    var = x32.var(axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rotary(theta: float, positions: jax.Array, head_dim: int) -> Tuple[jax.Array, jax.Array]:
+    """Rotary position embedding tables: returns (cos, sin) of shape
+    [..., head_dim//2] for the given positions."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., head_dim] with rotation applied on interleaved-half layout."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over the head axis: x is [B, S, H, hd], cos [B, S, half]
+    while cos.ndim < x1.ndim:
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rot1, rot2], axis=-1).astype(x.dtype)
+
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
+    """[q_len, kv_len] boolean mask; q positions are offset by ``q_offset``
+    (dynamic) relative to kv position 0."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    return k_pos <= q_pos
+
+
+def sliding_window_mask(q_len: int, kv_len: int, q_offset, window: int) -> jax.Array:
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    return (k_pos <= q_pos) & (k_pos > q_pos - window)

@@ -1,0 +1,137 @@
+"""LDA by collapsed Gibbs sampling under staleness (paper Section 3.1).
+
+Shared model state (the "parameters" the staleness engine transports):
+  phi       [W, K]  word-topic counts
+  phi_tilde [K]     corpus-wide topic counts (sum of phi over words)
+
+Worker-local state: its static document partition (tokens), the current topic
+assignments z, and a sweep cursor. One engine update resamples a slice of
+``batch_docs`` documents by collapsed Gibbs using the worker's *stale cached
+counts* and emits the resulting **count deltas** — additive updates, exactly
+what the delivery buffer carries. This mirrors distributed LDA practice
+(LightLDA, Yahoo LDA): workers sweep with stale sufficient statistics and ship
+deltas. Dirichlet priors alpha=0.1, beta=0.1 per Table 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    vocab: int
+    num_topics: int
+    alpha: float = 0.1
+    beta: float = 0.1
+    batch_docs: int = 8   # documents resampled per engine step (D/(10P) in paper)
+
+
+def init_counts(tokens: jnp.ndarray, z: jnp.ndarray, cfg: LDAConfig) -> Any:
+    """Global counts implied by assignments z over ALL workers' tokens."""
+    w_flat = tokens.reshape(-1)
+    z_flat = z.reshape(-1)
+    phi = jnp.zeros((cfg.vocab, cfg.num_topics), jnp.float32)
+    phi = phi.at[w_flat, z_flat].add(1.0)
+    return {"phi": phi, "phi_tilde": phi.sum(axis=0)}
+
+
+def init_worker_state(tokens_w: jnp.ndarray, z_w: jnp.ndarray) -> Any:
+    """Per-worker local state. ``tokens_w/z_w``: [docs_w, doc_len] int32."""
+    return {"tokens": tokens_w, "z": z_w, "cursor": jnp.int32(0)}
+
+
+def _doc_theta(z_d: jnp.ndarray, k: int) -> jnp.ndarray:
+    return jnp.sum(jax.nn.one_hot(z_d, k, dtype=jnp.float32), axis=0)
+
+
+def _gibbs_sweep_doc(phi, phi_tilde, tokens_d, z_d, key, cfg: LDAConfig):
+    """Collapsed Gibbs over one document's tokens (sequential lax.scan).
+
+    The document's own assignments are properly decremented (collapsed within
+    the document); the shared counts are the worker's stale cache, used
+    read-only during the sweep — the distributed-LDA convention.
+    """
+    k_topics = cfg.num_topics
+    theta0 = _doc_theta(z_d, k_topics)
+    w_beta = cfg.vocab * cfg.beta
+
+    def token_step(carry, inp):
+        theta, key = carry
+        w, z_old = inp
+        key, kk = jax.random.split(key)
+        theta = theta.at[z_old].add(-1.0)
+        phi_w = phi[w] - jax.nn.one_hot(z_old, k_topics, dtype=jnp.float32)
+        phit = phi_tilde - jax.nn.one_hot(z_old, k_topics, dtype=jnp.float32)
+        logits = (
+            jnp.log(jnp.maximum(theta + cfg.alpha, 1e-10))
+            + jnp.log(jnp.maximum(phi_w + cfg.beta, 1e-10))
+            - jnp.log(jnp.maximum(phit + w_beta, 1e-10))
+        )
+        z_new = jax.random.categorical(kk, logits)
+        theta = theta.at[z_new].add(1.0)
+        return (theta, key), z_new
+
+    (_, _), z_new = jax.lax.scan(token_step, (theta0, key), (tokens_d, z_d))
+    return z_new
+
+
+def make_update_fn(cfg: LDAConfig):
+    """Engine UpdateFn: (counts, worker_state, batch, key) -> (delta, state', metrics).
+
+    ``batch`` is unused (the worker owns its partition; the sweep cursor picks
+    the next ``batch_docs`` documents) — pass any placeholder with a leading
+    worker axis, e.g. zeros([P, 1]).
+    """
+    def update_fn(counts, wstate, batch, key):
+        tokens, z, cursor = wstate["tokens"], wstate["z"], wstate["cursor"]
+        docs_w = tokens.shape[0]
+        idx = (cursor + jnp.arange(cfg.batch_docs)) % docs_w
+        toks_b = tokens[idx]
+        z_b = z[idx]
+        keys = jax.random.split(key, cfg.batch_docs)
+        z_new = jax.vmap(
+            lambda t, zz, kk: _gibbs_sweep_doc(counts["phi"], counts["phi_tilde"], t, zz, kk, cfg)
+        )(toks_b, z_b, keys)
+
+        # Count deltas: -1 at (w, z_old), +1 at (w, z_new), per token.
+        w_flat = toks_b.reshape(-1)
+        d_phi = (
+            jnp.zeros_like(counts["phi"])
+            .at[w_flat, z_new.reshape(-1)].add(1.0)
+            .at[w_flat, z_b.reshape(-1)].add(-1.0)
+        )
+        delta = {"phi": d_phi, "phi_tilde": d_phi.sum(axis=0)}
+
+        new_state = {
+            "tokens": tokens,
+            "z": z.at[idx].set(z_new),
+            "cursor": (cursor + cfg.batch_docs) % docs_w,
+        }
+        moved = jnp.mean((z_new != z_b).astype(jnp.float32))
+        return delta, new_state, {"frac_moved": moved}
+
+    return update_fn
+
+
+def log_likelihood(counts: Any, tokens: jnp.ndarray, z: jnp.ndarray,
+                   cfg: LDAConfig) -> jax.Array:
+    """Collapsed per-token log likelihood of the corpus under current counts
+    (the paper's LDA quality metric). tokens/z: [docs, doc_len]."""
+    k = cfg.num_topics
+    theta = jax.vmap(lambda zd: _doc_theta(zd, k))(z)          # [D, K]
+    doc_len = tokens.shape[1]
+    p_topic = (theta + cfg.alpha) / (doc_len + k * cfg.alpha)   # [D, K]
+    phi = jnp.maximum(counts["phi"], 0.0)
+    phit = jnp.maximum(counts["phi_tilde"], 0.0)
+    p_word = (phi + cfg.beta) / (phit + cfg.vocab * cfg.beta)   # [W, K]
+    # p(w | d) = sum_k p_topic[d,k] p_word[w,k]
+    probs = jnp.einsum("dk,dlk->dl", p_topic, p_word[tokens])
+    return jnp.sum(jnp.log(jnp.maximum(probs, 1e-12)))
+
+
+def init_assignments(key: jax.Array, tokens: jnp.ndarray, cfg: LDAConfig) -> jnp.ndarray:
+    return jax.random.randint(key, tokens.shape, 0, cfg.num_topics, dtype=jnp.int32)

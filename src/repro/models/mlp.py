@@ -1,0 +1,54 @@
+"""DNN / MLR models from the paper (Section 3.1).
+
+DNNs: 0-6 hidden layers of 256 ReLU units + softmax; MLR is the 0-hidden-layer
+special case (convex). Pure-functional: params are plain dicts of arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int = 784
+    hidden: int = 256
+    depth: int = 1          # number of hidden layers; 0 == MLR
+    num_classes: int = 10
+
+
+def init(key: jax.Array, cfg: MLPConfig) -> Any:
+    dims = [cfg.in_dim] + [cfg.hidden] * cfg.depth + [cfg.num_classes]
+    params = []
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        # He init for ReLU hidden layers, Glorot-ish for the softmax layer.
+        scale = jnp.sqrt(2.0 / d_in) if i < len(dims) - 2 else jnp.sqrt(1.0 / d_in)
+        params.append({
+            "w": jax.random.normal(k, (d_in, d_out), jnp.float32) * scale,
+            "b": jnp.zeros((d_out,), jnp.float32),
+        })
+    return {"layers": params}
+
+
+def apply(params: Any, x: jax.Array) -> jax.Array:
+    h = x
+    layers = params["layers"]
+    for layer in layers[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    out = layers[-1]
+    return h @ out["w"] + out["b"]
+
+
+def loss_fn(params: Any, batch) -> jax.Array:
+    x, y = batch
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def accuracy(params: Any, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.argmax(apply(params, x), axis=-1) == y)

@@ -1,0 +1,112 @@
+"""ResNet with 6n+2 weight layers on CIFAR-shaped inputs (He et al. 2016),
+exactly as in the paper's CNN experiments: 3 groups of n residual blocks with
+16/32/64 feature maps, global average pooling, softmax. No data augmentation
+(paper Section 3.1). GroupNorm replaces BatchNorm so per-worker semantics do
+not leak cross-worker batch statistics into the staleness study — BatchNorm's
+cross-replica stats would themselves be a (confounding) form of staleness;
+recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    n: int = 1                # 6n+2 weight layers: n=1 -> ResNet8, n=5 -> ResNet32
+    num_classes: int = 10
+    widths: tuple = (16, 32, 64)
+    groups: int = 8           # GroupNorm groups
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _gn(x, p, groups):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(n, h, w, c) * p["scale"] + p["bias"]
+
+
+def init(key: jax.Array, cfg: ResNetConfig) -> Any:
+    keys = iter(jax.random.split(key, 4 + 6 * cfg.n * 3))
+    params: dict = {"stem": {"w": _conv_init(next(keys), 3, 3, 3, cfg.widths[0]),
+                             "gn": _gn_init(cfg.widths[0])}}
+    blocks = []
+    cin = cfg.widths[0]
+    for gi, width in enumerate(cfg.widths):
+        for bi in range(cfg.n):
+            stride = 2 if (gi > 0 and bi == 0) else 1
+            blk = {
+                "w1": _conv_init(next(keys), 3, 3, cin, width),
+                "gn1": _gn_init(width),
+                "w2": _conv_init(next(keys), 3, 3, width, width),
+                "gn2": _gn_init(width),
+            }
+            if stride != 1 or cin != width:
+                blk["proj"] = _conv_init(next(keys), 1, 1, cin, width)
+            blk["stride"] = stride  # static python int, removed before jit
+            blocks.append(blk)
+            cin = width
+    params["blocks"] = blocks
+    params["head"] = {
+        "w": jax.random.normal(next(keys), (cin, cfg.num_classes), jnp.float32)
+        * jnp.sqrt(1.0 / cin),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    # strides are static structure: strip them into the config side.
+    strides = tuple(b.pop("stride") for b in blocks)
+    params["_static_strides"] = ()  # placeholder so structure is stable
+    params.pop("_static_strides")
+    return {"params": params, }, strides
+
+
+def apply(params: Any, strides, x: jax.Array, cfg: ResNetConfig) -> jax.Array:
+    p = params["params"]
+    h = _gn(_conv(x, p["stem"]["w"]), p["stem"]["gn"], cfg.groups)
+    h = jax.nn.relu(h)
+    for blk, stride in zip(p["blocks"], strides):
+        resid = h
+        o = jax.nn.relu(_gn(_conv(h, blk["w1"], stride), blk["gn1"], cfg.groups))
+        o = _gn(_conv(o, blk["w2"]), blk["gn2"], cfg.groups)
+        if "proj" in blk:
+            resid = _conv(resid, blk["proj"], stride)
+        h = jax.nn.relu(o + resid)
+    pooled = h.mean(axis=(1, 2))
+    return pooled @ p["head"]["w"] + p["head"]["b"]
+
+
+def make_loss_fn(cfg: ResNetConfig, strides):
+    def loss_fn(params, batch):
+        x, y = batch
+        logits = apply(params, strides, x, cfg)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+    return loss_fn
+
+
+def make_accuracy_fn(cfg: ResNetConfig, strides):
+    def acc(params, x, y):
+        return jnp.mean(jnp.argmax(apply(params, strides, x, cfg), axis=-1) == y)
+    return acc

@@ -1,0 +1,324 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) blocks + a pure-SSM LM.
+
+The selective state space recurrence per head (state size N, head dim P):
+
+    h_t = a_t * h_{t-1} + dt_t * B_t x_t^T        (h: [N, P])
+    y_t = C_t^T h_t + D * x_t                      (a_t = exp(dt_t * A))
+
+Training/prefill use the *chunked* SSD algorithm: within a chunk of length Q
+the recurrence is materialized as a (masked, decay-weighted) attention-like
+quadratic form that maps onto the MXU; across chunks a short ``lax.scan``
+carries the [H, N, P] state. This is the TPU-native adaptation of the CUDA
+kernel in the paper — the chunk size plays the role VMEM tiling plays there
+(DESIGN.md §3). Decode is the O(1) recurrence with a carried state cache.
+
+Simplifications vs the reference implementation (recorded in DESIGN.md):
+ngroups = 1 (B/C shared across heads), separate depthwise convs for x/B/C.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSettings:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba_block(key, cfg: SSMSettings, param_dtype=jnp.float32) -> Any:
+    kz, kx, kb, kc, kdt, ko, ka, kd, kcv = jax.random.split(key, 9)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.num_heads
+    w = cfg.conv_width
+    # dt bias init so softplus(bias) spans [dt_min, dt_max] (mamba convention)
+    u = jax.random.uniform(kdt, (h,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min)) + jnp.log(cfg.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "w_z": L.dense_init(kz, (d, di), ("embed", "ssm_inner"), dtype=param_dtype),
+        "w_x": L.dense_init(kx, (d, di), ("embed", "ssm_inner"), dtype=param_dtype),
+        "w_b": L.dense_init(kb, (d, n), ("embed", "state"), dtype=param_dtype),
+        "w_c": L.dense_init(kc, (d, n), ("embed", "state"), dtype=param_dtype),
+        "w_dt": L.dense_init(ko, (d, h), ("embed", "ssm_heads"), dtype=param_dtype),
+        "dt_bias": L.Param(dt_bias.astype(param_dtype), ("ssm_heads",)),
+        "a_log": L.Param(jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)).astype(param_dtype),
+                         ("ssm_heads",)),
+        "d_skip": L.Param(jnp.ones((h,), param_dtype), ("ssm_heads",)),
+        "conv_x": L.Param(
+            (jax.random.normal(kcv, (w, di), jnp.float32) / jnp.sqrt(w)).astype(param_dtype),
+            ("conv", "ssm_inner")),
+        "conv_b": L.Param(jnp.zeros((w, n), param_dtype), ("conv", "state")),
+        "conv_c": L.Param(jnp.zeros((w, n), param_dtype), ("conv", "state")),
+        "norm": L.scale_init((di,), ("ssm_inner",), dtype=param_dtype),
+        "w_out": L.dense_init(ka, (di, d), ("ssm_inner", "embed"), dtype=param_dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv. x [B,T,C], w [W,C]; ``tail`` [B,W-1,C] is the
+    pre-conv context from a previous segment (decode). Identity at W-1 tap.
+    Returns (y [B,T,C], new_tail [B,W-1,C])."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # [B, T+W-1, C]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(width))
+    new_tail = xp[:, xp.shape[1] - (width - 1):]
+    return y, new_tail
+
+
+def _ssd_chunked(xh, a_log_dt, dt, bmat, cmat, cfg: SSMSettings, h0=None):
+    """Chunked SSD scan.
+
+    xh:       [B, T, H, P]   per-head inputs (post conv/activation)
+    a_log_dt: [B, T, H]      log a_t = dt_t * A  (negative)
+    dt:       [B, T, H]
+    bmat/cmat:[B, T, N]
+    h0:       [B, H, N, P]   initial state (None = zeros)
+    Returns (y [B,T,H,P], h_final [B,H,N,P]). fp32 state math.
+    """
+    b, t, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = cfg.chunk
+    pad = (-t) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log_dt = jnp.pad(a_log_dt, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    tt = t + pad
+    nc = tt // q
+
+    xh = xh.reshape(b, nc, q, h, p).astype(jnp.float32)
+    la = a_log_dt.reshape(b, nc, q, h).astype(jnp.float32)
+    dt = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    bm = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cm = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(la, axis=2)                      # [B,NC,Q,H]
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,NC,Qi,Qj,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cm, bm)          # [B,NC,Qi,Qj]
+    m = scores[..., None] * decay * dt[:, :, None, :, :]    # [B,NC,Qi,Qj,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xh)
+
+    # chunk summaries
+    tail_decay = jnp.exp(cum[:, :, -1:, :] - cum)           # [B,NC,Q,H]
+    s_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchnp",
+                         dt * tail_decay, bm, xh)           # [B,NC,H,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # [B,NC,H]
+
+    def chunk_step(hprev, inp):
+        s_c, cd = inp
+        hnew = cd[..., None, None] * hprev + s_c
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+    # scan over the chunk axis (swap to leading)
+    s_sw = jnp.swapaxes(s_chunk, 0, 1)
+    cd_sw = jnp.swapaxes(chunk_decay, 0, 1)
+    h_final, h_prevs = jax.lax.scan(chunk_step, h0, (s_sw, cd_sw))
+    h_prevs = jnp.swapaxes(h_prevs, 0, 1)                   # [B,NC,H,N,P]
+
+    inter_decay = jnp.exp(cum)                              # [B,NC,Q,H]
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", cm, h_prevs, inter_decay)
+
+    y = (y_intra + y_inter).reshape(b, tt, h, p)[:, :t]
+    return y, h_final
+
+
+def mamba_forward(p: Any, x: jax.Array, cfg: SSMSettings, dtype=jnp.float32,
+                  cache: Optional[dict] = None) -> Tuple[jax.Array, dict]:
+    """Full-segment forward. x [B,T,d] -> (y [B,T,d], new_cache).
+    ``cache`` carries {conv_x, conv_b, conv_c, h} across segments/decode."""
+    b, t, d = x.shape
+    h, pdim, n = cfg.num_heads, cfg.head_dim, cfg.d_state
+    z = jnp.einsum("btd,di->bti", x, p["w_z"].astype(dtype))
+    xi = jnp.einsum("btd,di->bti", x, p["w_x"].astype(dtype))
+    bm = jnp.einsum("btd,dn->btn", x, p["w_b"].astype(dtype))
+    cm = jnp.einsum("btd,dn->btn", x, p["w_c"].astype(dtype))
+    dt_raw = jnp.einsum("btd,dh->bth", x, p["w_dt"].astype(dtype))
+
+    tails = cache or {}
+    xi, tail_x = _causal_conv(xi, p["conv_x"].astype(dtype), tails.get("conv_x"))
+    bm, tail_b = _causal_conv(bm, p["conv_b"].astype(dtype) +
+                              _identity_tap(cfg.conv_width, n, dtype),
+                              tails.get("conv_b"))
+    cm, tail_c = _causal_conv(cm, p["conv_c"].astype(dtype) +
+                              _identity_tap(cfg.conv_width, n, dtype),
+                              tails.get("conv_c"))
+    xi = jax.nn.silu(xi)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # [H] negative
+    a_log_dt = dt * a[None, None, :]
+
+    xh = xi.reshape(b, t, h, pdim)
+    y, h_final = _ssd_chunked(xh, a_log_dt, dt, bm, cm, cfg,
+                              h0=tails.get("h"))
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, t, cfg.d_inner).astype(dtype)
+
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, p["norm"])
+    out = jnp.einsum("bti,id->btd", y, p["w_out"].astype(dtype))
+    new_cache = {"conv_x": tail_x, "conv_b": tail_b, "conv_c": tail_c,
+                 "h": h_final.astype(jnp.float32)}
+    return out, new_cache
+
+
+def _identity_tap(width: int, channels: int, dtype):
+    """conv_b/conv_c start as identity (last tap = 1) so an untrained conv
+    passes B/C through — mirrors mamba2's conv init on B/C."""
+    tap = jnp.zeros((width, channels), dtype)
+    return tap.at[width - 1].set(1.0)
+
+
+def mamba_cache_init(cfg: SSMSettings, batch: int, dtype=jnp.float32):
+    w = cfg.conv_width - 1
+    cache = {
+        "conv_x": jnp.zeros((batch, w, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, w, cfg.d_state), dtype),
+        "conv_c": jnp.zeros((batch, w, cfg.d_state), dtype),
+        "h": jnp.zeros((batch, cfg.num_heads, cfg.d_state, cfg.head_dim), jnp.float32),
+    }
+    axes = {
+        "conv_x": ("cache_batch", None, "ssm_inner"),
+        "conv_b": ("cache_batch", None, None),
+        "conv_c": ("cache_batch", None, None),
+        "h": ("cache_batch", "ssm_heads", None, None),
+    }
+    return cache, axes
+
+
+def mamba_decode(p: Any, x: jax.Array, cache: dict, cfg: SSMSettings,
+                 dtype=jnp.float32) -> Tuple[jax.Array, dict]:
+    """Single-token decode via the O(1) recurrence. x [B,1,d]."""
+    return mamba_forward(p, x, cfg, dtype=dtype, cache=cache)
+
+
+# ------------------------------------------------------ pure-SSM LM --------
+
+@dataclasses.dataclass(frozen=True)
+class MambaLMConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    vocab: int
+    vocab_real: int
+    ssm: SSMSettings = None  # type: ignore
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    norm_eps: float = 1e-6
+    remat: bool = True
+
+
+def lm_init(key, cfg: MambaLMConfig):
+    ke, kl, kh = jax.random.split(key, 3)
+    emb = L.embed_init(ke, (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       dtype=cfg.param_dtype)
+    head = L.dense_init(kh, (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                        dtype=cfg.param_dtype)
+    final_ln = L.scale_init((cfg.d_model,), ("embed",), dtype=cfg.param_dtype)
+
+    captured = {}
+
+    def layer_fn(k):
+        block = {
+            "ln": L.scale_init((cfg.d_model,), ("embed",), dtype=cfg.param_dtype),
+            "mamba": init_mamba_block(k, cfg.ssm, cfg.param_dtype),
+        }
+        vals, axes = L.unzip(block)
+        captured["axes"] = axes
+        return vals
+
+    values = jax.vmap(layer_fn)(jax.random.split(kl, cfg.num_layers))
+    layer_axes = jax.tree.map(
+        lambda a: ("layers",) + a, captured["axes"],
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, L.Param))
+    params = {"embed": emb.value, "head": head.value,
+              "final_ln": final_ln.value, "layers": values}
+    axes = {"embed": emb.axes, "head": head.axes,
+            "final_ln": final_ln.axes, "layers": layer_axes}
+    return params, axes
+
+
+def lm_forward(params, tokens, cfg: MambaLMConfig, cache=None,
+               return_cache: bool = False):
+    hdn = params["embed"].astype(cfg.dtype)[tokens]
+    had_cache = cache is not None
+
+    def body(carry, xs):
+        hdn = carry
+        layer_p, layer_cache = xs
+
+        def run(hdn):
+            norm = L.rms_norm(hdn, layer_p["ln"], cfg.norm_eps)
+            y, new_c = mamba_forward(layer_p["mamba"], norm, cfg.ssm,
+                                     dtype=cfg.dtype, cache=layer_cache)
+            return hdn + y, new_c
+
+        if cfg.remat and not had_cache:
+            run = jax.checkpoint(run)
+        hdn, new_c = run(hdn)
+        return hdn, new_c
+
+    if cache is None:
+        cache = lm_cache_init(cfg, tokens.shape[0])[0]
+    hdn, new_cache = jax.lax.scan(body, hdn, (params["layers"], cache))
+    hdn = L.rms_norm(hdn, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", hdn, params["head"].astype(cfg.dtype))
+    vmask = jnp.where(jnp.arange(cfg.vocab) < cfg.vocab_real, 0.0, -1e9)
+    logits = logits + vmask.astype(logits.dtype)
+    if return_cache or had_cache:
+        return logits, new_cache
+    return logits
+
+
+def lm_cache_init(cfg: MambaLMConfig, batch: int):
+    cache, axes = mamba_cache_init(cfg.ssm, batch, cfg.dtype)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), cache)
+    axes = jax.tree.map(
+        lambda a: ("layers",) + a, axes,
+        is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, axes
+
+
+def lm_loss(params, batch, cfg: MambaLMConfig):
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = lm_forward(params, inputs, cfg)
+    if isinstance(logits, tuple):
+        logits = logits[0]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adagrad,
+    adam,
+    get_optimizer,
+    make_sgd_update_fn,
+    make_stochastic_update_fn,
+    momentum,
+    paper_default,
+    rmsprop,
+    sgd,
+)
+from repro.optim import schedules

@@ -1,0 +1,32 @@
+"""Learning-rate schedules, including the Theorem-1 stepsize."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def inv_sqrt(base: float, warmup: int = 0):
+    """base / sqrt(k), with optional linear warmup."""
+    def sched(step):
+        k = jnp.maximum(step.astype(jnp.float32), 1.0)
+        lr = base / jnp.sqrt(k)
+        if warmup > 0:
+            lr = jnp.where(step < warmup, base * step / warmup / jnp.sqrt(1.0 * warmup), lr)
+        return lr
+    return sched
+
+
+def theorem1(mu: float, s: int, lipschitz: float):
+    """eta_k = mu / (s L sqrt(k)) — the stepsize of Theorem 1."""
+    denom = max(s, 1) * max(lipschitz, 1e-8)
+    return lambda step: jnp.float32(mu) / (denom * jnp.sqrt(jnp.maximum(step.astype(jnp.float32), 1.0)))
+
+
+def cosine(base: float, total_steps: int, floor: float = 0.0):
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return floor + 0.5 * (base - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return sched

@@ -1,0 +1,10 @@
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    batch_spec,
+    constraint,
+    pad_to_multiple,
+    rules_for,
+    spec_for,
+    tree_shardings,
+    tree_specs,
+)

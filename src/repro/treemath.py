@@ -1,0 +1,88 @@
+"""Pytree arithmetic helpers used throughout the framework.
+
+All helpers are pure and jit-friendly. They deliberately avoid optax to keep
+the substrate self-contained (the brief: build every substrate in JAX).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, c) -> Pytree:
+    return jax.tree.map(lambda x: x * c, a)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha * x + y, elementwise over matching pytrees."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a: Pytree, b: Pytree) -> jax.Array:
+    """Inner product over all leaves (fp32 accumulation)."""
+    parts = jax.tree.leaves(
+        jax.tree.map(
+            lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+        )
+    )
+    return functools.reduce(jnp.add, parts, jnp.float32(0.0))
+
+
+def tree_sq_norm(a: Pytree) -> jax.Array:
+    return tree_dot(a, a)
+
+
+def tree_norm(a: Pytree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_size(a: Pytree) -> int:
+    """Total number of elements (static)."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_cast(a: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_stack(trees: list[Pytree]) -> Pytree:
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(a: Pytree, i) -> Pytree:
+    """Dynamic index into the leading axis of every leaf."""
+    return jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False), a)
+
+
+def tree_broadcast_leading(a: Pytree, n: int) -> Pytree:
+    """Tile every leaf with a new leading axis of size n."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), a)
+
+
+def tree_flatten_to_vector(a: Pytree) -> jax.Array:
+    """Concatenate all leaves into one fp32 vector (for coherence probes)."""
+    leaves = [x.astype(jnp.float32).reshape(-1) for x in jax.tree.leaves(a)]
+    return jnp.concatenate(leaves) if leaves else jnp.zeros((0,), jnp.float32)
+
+
+def tree_allfinite(a: Pytree) -> jax.Array:
+    parts = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(a)]
+    return functools.reduce(jnp.logical_and, parts, jnp.bool_(True))

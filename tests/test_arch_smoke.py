@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: REDUCED variants (<=2-4 layers, d_model<=512,
+<=4 experts) run one forward/train step on CPU; shapes + finiteness asserted.
+The full configs are exercised only via the dry-run (no allocation here)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.configs.base import SHAPES, count_params
+
+ARCHS = cfglib.list_archs()
+
+
+def tiny_batch(api, key, batch=2, seq=12):
+    """A CPU-sized batch matching the arch's batch structure."""
+    spec = api.batch_spec(SHAPES["train_4k"])
+    out = {}
+    for name, s in spec.items():
+        shape = (batch,) + s.shape[1:]
+        if name == "tokens":
+            shape = (batch, seq + 1)
+            out[name] = jax.random.randint(key, shape, 0, api.vocab_real)
+        else:
+            out[name] = jax.random.normal(key, shape, jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_reduced_train_step(arch_id):
+    arch = cfglib.get(arch_id)
+    api = arch.api(reduced=True)
+    assert count_params(api) < 30e6, "reduced variant must stay CPU-sized"
+
+    params, axes = api.init(jax.random.PRNGKey(0))
+    # axes tree mirrors params structurally
+    assert (jax.tree.structure(params).num_leaves ==
+            len([a for a in jax.tree.leaves(
+                axes, is_leaf=lambda x: isinstance(x, tuple))]))
+
+    batch = tiny_batch(api, jax.random.PRNGKey(1))
+    loss, grads = jax.value_and_grad(api.loss)(params, batch)
+    assert jnp.isfinite(loss), arch_id
+    # a fresh model should start near uniform CE over the real vocab
+    assert float(loss) < np.log(api.vocab_real) * 1.5
+    finite = jax.tree_util.tree_all(
+        jax.tree.map(lambda g: jnp.isfinite(g).all(), grads))
+    assert bool(finite), arch_id
+
+    # one SGD step moves the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+    loss2 = api.loss(params2, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_reduced_prefill_decode_parity(arch_id):
+    """decode(prefill(x[:-1])) logits == full forward's last position."""
+    arch = cfglib.get(arch_id)
+    api = arch.api(reduced=True)
+    params, _ = api.init(jax.random.PRNGKey(0))
+
+    b, s = 2, 11
+    batch = tiny_batch(api, jax.random.PRNGKey(1), batch=b, seq=s)
+    tokens = batch["tokens"]
+
+    full_loss_batch = dict(batch)
+    # full forward logits via prefill on the whole sequence
+    last_full, _ = api.prefill(params, dict(batch, tokens=tokens))
+
+    pre_batch = dict(batch, tokens=tokens[:, :s])
+    _, cache = api.prefill(params, pre_batch)
+
+    # grow KV caches by one slot where the family uses ring buffers
+    cache_grown, _ = api.init_cache(b, s + 1)
+
+    def graft(dst, src):
+        if isinstance(dst, dict):
+            return {k: graft(dst[k], src[k]) for k in dst}
+        if dst.shape == src.shape:
+            return src
+        # KV leaf: copy src into the first src-length slots
+        sl = tuple(slice(0, d) for d in src.shape)
+        return jnp.asarray(dst).at[sl].set(src)
+
+    try:
+        cache_use = graft(cache_grown, cache)
+    except Exception:
+        cache_use = cache  # SSM caches are seq-length independent
+
+    logits, _ = api.decode(params, tokens[:, s:s + 1], cache_use, jnp.int32(s))
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(last_full[:, 0]),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_full_config_shapes(arch_id):
+    """Full configs build abstractly with the exact assigned dimensions."""
+    arch = cfglib.get(arch_id)
+    api = arch.api()
+    cfg = api.cfg
+    expected = {
+        "qwen2-moe-a2.7b": dict(num_layers=24, d_model=2048),
+        "qwen3-14b": dict(num_layers=40, d_model=5120, num_heads=40),
+        "zamba2-7b": dict(num_layers=81, d_model=3584),
+        "h2o-danube-1.8b": dict(num_layers=24, d_model=2560, swa_window=4096),
+        "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64),
+        "whisper-base": dict(num_layers=6, d_model=512),
+        "mamba2-1.3b": dict(num_layers=48, d_model=2048),
+        "deepseek-67b": dict(num_layers=95, d_model=8192),
+        "llama-3.2-vision-11b": dict(num_layers=40, d_model=4096),
+        "deepseek-7b": dict(num_layers=30, d_model=4096),
+    }[arch_id]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch_id, k)
+
+
+def test_param_counts_match_names():
+    expect = {
+        "kimi-k2-1t-a32b": (0.95e12, 1.15e12),
+        "deepseek-67b": (6.4e10, 7.0e10),
+        "qwen3-14b": (1.4e10, 1.55e10),
+        "llama-3.2-vision-11b": (1.05e10, 1.25e10),
+        "deepseek-7b": (6.5e9, 7.3e9),
+        "zamba2-7b": (6.3e9, 7.2e9),
+        "mamba2-1.3b": (1.2e9, 1.6e9),
+        "h2o-danube-1.8b": (1.6e9, 2.0e9),
+        "whisper-base": (0.8e8, 1.6e8),
+    }
+    for arch_id, (lo, hi) in expect.items():
+        n = count_params(cfglib.get(arch_id).api())
+        assert lo <= n <= hi, (arch_id, n)

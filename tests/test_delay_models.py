@@ -1,0 +1,62 @@
+"""Property tests for the delay models (paper Section 3 / Appendix A.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.delay import (ConstantDelay, GeometricDelay, UniformDelay,
+                              matched_geometric)
+
+
+@given(s=st.integers(0, 40), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_uniform_delay_bounds(s, seed):
+    model = UniformDelay(s)
+    draws = model.sample(jax.random.PRNGKey(seed), (16, 16))
+    assert draws.dtype == jnp.int32
+    assert int(draws.min()) >= 0
+    assert int(draws.max()) <= model.bound
+    assert model.bound == max(s - 1, 0)
+
+
+def test_uniform_delay_is_uniform():
+    model = UniformDelay(8)
+    draws = np.asarray(model.sample(jax.random.PRNGKey(0), (4000,)))
+    counts = np.bincount(draws, minlength=8)
+    # each bin ~500; loose chi-square-ish bound
+    assert counts.min() > 350 and counts.max() < 650
+
+
+def test_uniform_mean_total_delay_matches_paper():
+    # paper: average delay = s/2 + 1 (approximately, for the categorical model)
+    model = UniformDelay(20)
+    draws = np.asarray(model.sample(jax.random.PRNGKey(1), (100_000,)))
+    assert abs((draws.mean() + 1) - (20 / 2 + 1)) < 0.6
+
+
+@given(v=st.integers(0, 12))
+@settings(max_examples=10, deadline=None)
+def test_constant_delay(v):
+    model = ConstantDelay(v)
+    draws = model.sample(jax.random.PRNGKey(0), (8,))
+    assert (np.asarray(draws) == v).all()
+
+
+def test_geometric_truncated_and_straggler():
+    model = GeometricDelay(p_normal=0.5, p_straggler=0.05, trunc=31)
+    draws = np.asarray(model.sample(jax.random.PRNGKey(2), (8, 8)))
+    assert draws.min() >= 0 and draws.max() <= 31
+    # one source row (the straggler) should have a clearly larger mean
+    row_means = draws.mean(axis=1)
+    assert row_means.max() > 2 * np.median(row_means)
+
+
+def test_matched_geometric_mean():
+    s, p = 16, 8
+    model = matched_geometric(s, p)
+    keys = jax.random.split(jax.random.PRNGKey(3), 400)
+    draws = np.asarray(jax.vmap(lambda k: model.sample(k, (p, p)))(keys))
+    target = (s - 1) / 2
+    assert abs(draws.mean() - target) < 1.0, (draws.mean(), target)
