@@ -1,23 +1,23 @@
 """Shared harness for the paper-reproduction experiments.
 
-Every figure benchmark builds on ``run_staleness_experiment``: construct a
-model + synthetic dataset + the simulation engine at a given staleness, step
+Every figure benchmark runs through the unified ``repro.engine`` surface:
+construct a model + synthetic dataset + an engine at a given staleness, step
 until the target metric (or budget), and report batches-to-target — the
 paper's primary measurement (Figs. 1-3).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import StalenessConfig, UniformDelay, init_sim_state, make_sim_step
+from repro.core import StalenessConfig, UniformDelay
 from repro.core.delay import DelayModel
 from repro.data import ShardedBatches, synthetic
+from repro.engine import EngineConfig, Trainer, build_engine
 from repro.models import mf, mlp, resnet, vae
 from repro.optim import optimizers as optlib
 
@@ -36,27 +36,36 @@ class ExperimentResult:
 def run_engine(update_fn, params, ustate, cfg: StalenessConfig, batches_iter,
                eval_fn, target, higher_better, max_steps, eval_every,
                seed=0, server_apply=None):
-    """Generic engine loop. ``eval_fn(caches0) -> float``; ``target`` is the
-    paper's quality threshold. Returns ExperimentResult. Batch counting
-    follows the paper: P batches are processed per engine step."""
-    state = init_sim_state(params, ustate, cfg, jax.random.PRNGKey(seed))
-    step = jax.jit(make_sim_step(update_fn, cfg, server_apply=server_apply))
-    eval_jit = jax.jit(eval_fn)
+    """Deprecated shim over ``repro.engine`` (kept for legacy callers):
+    simulation-mode engine loop with the paper's batch accounting (P worker
+    batches per engine step). ``eval_fn(caches0) -> float``; ``target`` is
+    the paper's quality threshold. Returns ExperimentResult."""
+    ecfg = EngineConfig(mode="simulate", num_workers=cfg.num_workers,
+                        delay=cfg.delay, server_side=cfg.server_side)
+    engine = build_engine(None, None, ecfg, update_fn=update_fn,
+                          server_apply=server_apply)
+    state = engine.init(jax.random.PRNGKey(seed), params=params,
+                        update_state=ustate)
+    res = Trainer(engine).run(batches_iter, max_steps, state=state,
+                              eval_fn=eval_fn, eval_every=eval_every,
+                              target=target, higher_better=higher_better)
+    return ExperimentResult(res.batches_to_target, res.curve, res.converged,
+                            res.wall_s)
 
-    t0 = time.time()
-    curve = []
-    for t, batch in enumerate(batches_iter):
-        if t >= max_steps:
-            break
-        state, _ = step(state, batch)
-        if (t + 1) % eval_every == 0:
-            metric = float(eval_jit(jax.tree.map(lambda x: x[0], state.caches)))
-            batches = (t + 1) * cfg.num_workers
-            curve.append((batches, metric))
-            hit = metric >= target if higher_better else metric <= target
-            if hit:
-                return ExperimentResult(batches, curve, True, time.time() - t0)
-    return ExperimentResult(None, curve, False, time.time() - t0)
+
+def _run_sim(loss_fn, opt, params, workers, delay, batches, eval_fn, target,
+             higher_better, max_steps, eval_every, seed,
+             loss_takes_key=False) -> ExperimentResult:
+    """All figure experiments share this: a simulate-mode engine + Trainer."""
+    ecfg = EngineConfig(mode="simulate", num_workers=workers, delay=delay,
+                        loss_takes_key=loss_takes_key)
+    engine = build_engine(loss_fn, opt, ecfg)
+    state = engine.init(jax.random.PRNGKey(seed), params=params)
+    res = Trainer(engine).run(batches, max_steps, state=state,
+                              eval_fn=eval_fn, eval_every=eval_every,
+                              target=target, higher_better=higher_better)
+    return ExperimentResult(res.batches_to_target, res.curve, res.converged,
+                            res.wall_s)
 
 
 def dnn_experiment(depth: int, algo: str, s: int, workers: int,
@@ -69,15 +78,13 @@ def dnn_experiment(depth: int, algo: str, s: int, workers: int,
     cfg_m = mlp.MLPConfig(depth=depth)
     params = mlp.init(jax.random.PRNGKey(seed), cfg_m)
     opt = optlib.paper_default(algo, lr=lr)
-    update_fn = optlib.make_sgd_update_fn(mlp.loss_fn, opt)
-    scfg = StalenessConfig(num_workers=workers,
-                           delay=delay or UniformDelay(s))
     batches = ShardedBatches([data.x_train, data.y_train], workers, batch,
                              seed=seed)
     xt, yt = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
     eval_fn = lambda p: mlp.accuracy(p, xt, yt)
-    return run_engine(update_fn, params, opt.init(params), scfg, iter(batches),
-                      eval_fn, target_acc, True, max_steps, eval_every, seed)
+    return _run_sim(mlp.loss_fn, opt, params, workers,
+                    delay or UniformDelay(s), iter(batches), eval_fn,
+                    target_acc, True, max_steps, eval_every, seed)
 
 
 def cnn_experiment(n_blocks: int, algo: str, s: int, workers: int,
@@ -94,16 +101,14 @@ def cnn_experiment(n_blocks: int, algo: str, s: int, workers: int,
     loss_fn = resnet.make_loss_fn(cfg_r, strides)
     acc_fn = resnet.make_accuracy_fn(cfg_r, strides)
     opt = optlib.paper_default(algo)
-    update_fn = optlib.make_sgd_update_fn(loss_fn, opt)
-    scfg = StalenessConfig(num_workers=workers,
-                           delay=delay or UniformDelay(s))
     batches = ShardedBatches([data.x_train, data.y_train], workers, batch,
                              seed=seed)
     xt = jnp.asarray(data.x_test[:512])
     yt = jnp.asarray(data.y_test[:512])
     eval_fn = lambda p: acc_fn(p, xt, yt)
-    return run_engine(update_fn, params, opt.init(params), scfg, iter(batches),
-                      eval_fn, target_acc, True, max_steps, eval_every, seed)
+    return _run_sim(loss_fn, opt, params, workers, delay or UniformDelay(s),
+                    iter(batches), eval_fn, target_acc, True, max_steps,
+                    eval_every, seed)
 
 
 def mf_experiment(s: int, workers: int, target_loss: float = 0.15,
@@ -116,14 +121,13 @@ def mf_experiment(s: int, workers: int, target_loss: float = 0.15,
     params = mf.init(jax.random.PRNGKey(seed), cfg_m)
     loss_fn = mf.make_loss_fn(cfg_m)
     opt = optlib.sgd(1.0)  # calibrated: 0.15 objective hit mid-descent (staleness-sensitive)
-    update_fn = optlib.make_sgd_update_fn(loss_fn, opt)
-    scfg = StalenessConfig(num_workers=workers, delay=UniformDelay(s))
     batches = ShardedBatches([data.rows, data.cols, data.vals], workers,
                              batch, seed=seed)
     rows, cols, vals = (jnp.asarray(a) for a in (data.rows, data.cols, data.vals))
     eval_fn = lambda p: mf.full_objective(p, rows, cols, vals, cfg_m)
-    return run_engine(update_fn, params, opt.init(params), scfg, iter(batches),
-                      eval_fn, target_loss, False, max_steps, eval_every, seed)
+    return _run_sim(loss_fn, opt, params, workers, UniformDelay(s),
+                    iter(batches), eval_fn, target_loss, False, max_steps,
+                    eval_every, seed)
 
 
 def vae_experiment(depth: int, algo: str, s: int, workers: int = 1,
@@ -136,14 +140,12 @@ def vae_experiment(depth: int, algo: str, s: int, workers: int = 1,
     params = vae.init(jax.random.PRNGKey(seed), cfg_v)
     loss_fn = vae.make_loss_fn(cfg_v)
     opt = optlib.paper_default(algo)
-    update_fn = optlib.make_stochastic_update_fn(loss_fn, opt)
-    scfg = StalenessConfig(num_workers=workers, delay=UniformDelay(s))
     batches = ShardedBatches([data.x_train], workers, batch, seed=seed)
     xt = jnp.asarray(data.x_test[:512])
     eval_fn = lambda p: vae.test_loss(p, xt, jax.random.PRNGKey(99), cfg_v)
-    return run_engine(update_fn, params, opt.init(params), scfg,
-                      ((b[0],) for b in batches),
-                      eval_fn, target_loss, False, max_steps, eval_every, seed)
+    return _run_sim(loss_fn, opt, params, workers, UniformDelay(s),
+                    ((b[0],) for b in batches), eval_fn, target_loss, False,
+                    max_steps, eval_every, seed, loss_takes_key=True)
 
 
 def normalized(results: dict) -> dict:
@@ -191,14 +193,15 @@ def lda_experiment(s: int, workers: int, k_topics: int = 10,
     wz = z0[: per * workers].reshape(workers, per, doc_len)
 
     update_fn = lda.make_update_fn(cfg_l)
-    scfg = StalenessConfig(num_workers=workers, delay=UniformDelay(s))
-    state = init_sim_state(counts, lda.init_worker_state(wtoks[0], wz[0]),
-                           scfg, key)
+    ecfg = EngineConfig(mode="simulate", num_workers=workers,
+                        delay=UniformDelay(s))
+    engine = build_engine(None, None, ecfg, update_fn=update_fn)
+    state = engine.init(key, params=counts,
+                        update_state=lda.init_worker_state(wtoks[0], wz[0]))
     # per-worker partitions differ: overwrite the broadcast update_state
-    state = _dc.replace(state, update_state={
-        "tokens": wtoks, "z": wz, "cursor": jnp.zeros((workers,), jnp.int32)})
+    state = _dc.replace(state, inner=_dc.replace(state.inner, update_state={
+        "tokens": wtoks, "z": wz, "cursor": jnp.zeros((workers,), jnp.int32)}))
 
-    step = jax.jit(make_sim_step(update_fn, scfg))
     ll_jit = jax.jit(lambda c, z: lda.log_likelihood(c, toks[: per * workers].reshape(-1, doc_len),
                                                      z.reshape(-1, doc_len), cfg_l))
     placeholder = jnp.zeros((workers, 1))
@@ -207,9 +210,9 @@ def lda_experiment(s: int, workers: int, k_topics: int = 10,
     docs_per_step = cfg_l.batch_docs * workers
     steps = sweeps * max(per // cfg_l.batch_docs, 1)
     for t in range(steps):
-        state, _ = step(state, placeholder)
+        state, _ = engine.step(state, placeholder)
         if (t + 1) % 5 == 0:
-            c0 = jax.tree.map(lambda x: x[0], state.caches)
-            ll = float(ll_jit(c0, state.update_state["z"]))
+            ll = float(ll_jit(engine.params(state),
+                              state.inner.update_state["z"]))
             curve.append(((t + 1) * docs_per_step, ll))
     return curve

@@ -15,10 +15,10 @@ import numpy as np
 
 from benchmarks import common
 from repro import treemath as tm
-from repro.core import (StalenessConfig, UniformDelay, init_coherence,
-                        init_sim_state, make_sim_step, observe)
+from repro.core import UniformDelay, init_coherence, observe
 from repro.core.delay import matched_geometric
 from repro.data import ShardedBatches, synthetic
+from repro.engine import EngineConfig, build_engine
 from repro.models import mlp
 from repro.optim import optimizers as optlib
 
@@ -31,11 +31,9 @@ def coherence_trace(depth: int, algo: str, s: int, workers: int = 8,
     cfg_m = mlp.MLPConfig(depth=depth)
     params = mlp.init(jax.random.PRNGKey(seed), cfg_m)
     opt = optlib.paper_default(algo)
-    update_fn = optlib.make_sgd_update_fn(mlp.loss_fn, opt)
-    scfg = StalenessConfig(num_workers=workers, delay=UniformDelay(s))
-    state = init_sim_state(params, opt.init(params), scfg,
-                           jax.random.PRNGKey(seed))
-    step = jax.jit(make_sim_step(update_fn, scfg))
+    engine = build_engine(mlp.loss_fn, opt, EngineConfig(
+        mode="simulate", num_workers=workers, delay=UniformDelay(s)))
+    state = engine.init(jax.random.PRNGKey(seed), params=params)
 
     probe = (jnp.asarray(data.x_train[:1000]), jnp.asarray(data.y_train[:1000]))
     dim = tm.tree_size(params)
@@ -50,9 +48,9 @@ def coherence_trace(depth: int, algo: str, s: int, workers: int = 8,
                                   seed=seed))
     trace = []
     for t in range(steps):
-        state, _ = step(state, next(batches))
+        state, _ = engine.step(state, next(batches))
         if (t + 1) % probe_every == 0:
-            g = probe_grad(jax.tree.map(lambda x: x[0], state.caches))
+            g = probe_grad(engine.params(state))
             coh, out = observe_jit(coh, g)
             trace.append((t + 1, float(out["mu"]),
                           [round(float(c), 4) for c in out["cos_by_lag"]]))

@@ -12,8 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import StalenessConfig, UniformDelay, init_sim_state, make_sim_step
+from repro.core import UniformDelay
 from repro.data import ShardedBatches, synthetic
+from repro.engine import EngineConfig, build_engine
 from repro.models import mlp
 from repro.optim import optimizers as optlib
 from repro.optim.schedules import theorem1
@@ -26,11 +27,9 @@ def grad_norm_trace(s: int, steps: int = 2000, workers: int = 4,
     params = mlp.init(jax.random.PRNGKey(seed), cfg_m)
     sched = theorem1(mu=mu, s=max(s, 1), lipschitz=lipschitz)
     opt = optlib.sgd(sched)
-    update_fn = optlib.make_sgd_update_fn(mlp.loss_fn, opt)
-    scfg = StalenessConfig(num_workers=workers, delay=UniformDelay(s))
-    state = init_sim_state(params, opt.init(params), scfg,
-                           jax.random.PRNGKey(seed))
-    step = jax.jit(make_sim_step(update_fn, scfg))
+    engine = build_engine(mlp.loss_fn, opt, EngineConfig(
+        mode="simulate", num_workers=workers, delay=UniformDelay(s)))
+    state = engine.init(jax.random.PRNGKey(seed), params=params)
     probe = (jnp.asarray(data.x_train[:1000]), jnp.asarray(data.y_train[:1000]))
 
     @jax.jit
@@ -42,9 +41,9 @@ def grad_norm_trace(s: int, steps: int = 2000, workers: int = 4,
                                   seed=seed))
     trace, running_min = [], float("inf")
     for t in range(steps):
-        state, _ = step(state, next(batches))
+        state, _ = engine.step(state, next(batches))
         if (t + 1) % 50 == 0:
-            v = float(gsq(jax.tree.map(lambda x: x[0], state.caches)))
+            v = float(gsq(engine.params(state)))
             running_min = min(running_min, v)
             trace.append((t + 1, v, running_min))
     return trace

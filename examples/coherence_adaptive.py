@@ -1,25 +1,23 @@
-"""Beyond-paper demo: coherence-gated synchronization + the Theorem-1
-auto-stepsize (DESIGN.md §8).
+"""Beyond-paper demo: coherence-gated synchronization (DESIGN.md §8) on the
+unified engine.
 
-Trains the same model three ways at high staleness (s=16, Adam — the paper's
+Trains the same model two ways at high staleness (s=16, Adam — the paper's
 fragile regime) and compares:
-  1. fixed stale execution (paper setting),
-  2. Theorem-1 stepsize eta_k = mu_hat / (s L_hat sqrt(k)) with online
-     secant-estimated L,
-  3. coherence-gated controller: staleness bound shrinks when mu_k drops.
+  1. fixed stale execution (the paper's setting),
+  2. coherence-gated control: a ``CoherenceHook`` watches mu_k on a probe
+     batch and clamps the engine's staleness bound via
+     ``engine.with_staleness`` when coherence degrades — no engine rebuild,
+     no buffer reshape, just a runtime clamp on the sampled delays.
 
   PYTHONPATH=src python examples/coherence_adaptive.py
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
 from repro import treemath as tm
-from repro.core import (CoherenceController, StalenessConfig, UniformDelay,
-                        init_coherence, init_sim_state, make_sim_step, observe)
-from repro.core import coherence as coh
+from repro.core import CoherenceController
 from repro.data import ShardedBatches, synthetic
+from repro.engine import CoherenceHook, EngineConfig, Trainer, build_engine
 from repro.models import mlp
 from repro.optim import optimizers as optlib
 
@@ -28,69 +26,32 @@ WORKERS, S, STEPS = 8, 16, 1200
 
 def run(mode: str):
     data = synthetic.teacher_classification(seed=0)
-    cfg_m = mlp.MLPConfig(depth=2)
-    params = mlp.init(jax.random.PRNGKey(0), cfg_m)
-    dim = tm.tree_size(params)
-
-    lr_scale = {"v": jnp.float32(1.0)}
-
-    def scheduled_lr(step):
-        return jnp.float32(1e-3)
+    params = mlp.init(jax.random.PRNGKey(0), mlp.MLPConfig(depth=2))
 
     opt = optlib.adam(1e-3)
-    update_fn = optlib.make_sgd_update_fn(mlp.loss_fn, opt)
+    engine = build_engine(mlp.loss_fn, opt, EngineConfig(
+        mode="simulate", num_workers=WORKERS, s=S))
+    state = engine.init(jax.random.PRNGKey(1), params=params)
 
-    controller = CoherenceController(s_max=S, lo=0.0, hi=0.3, patience=10)
-    ctl = controller.init()
-    monitor = init_coherence(dim, window=8)
-    secant = coh.init_secant(dim)
+    hooks = []
+    if mode == "gated":
+        controller = CoherenceController(s_max=S, lo=0.0, hi=0.3, patience=10)
+        probe = (jnp.asarray(data.x_train[:1000]),
+                 jnp.asarray(data.y_train[:1000]))
+        hooks.append(CoherenceHook(mlp.loss_fn, probe,
+                                   dim=tm.tree_size(params), window=8,
+                                   every=10, controller=controller))
 
-    scfg = StalenessConfig(num_workers=WORKERS, delay=UniformDelay(S))
-    state = init_sim_state(params, opt.init(params), scfg, jax.random.PRNGKey(1))
-    step_full = jax.jit(make_sim_step(update_fn, scfg))
-    # controller path: a second engine at half/quarter staleness to switch to
-    alt_engines = {}
-    for s_alt in {S // 2, S // 4, 1}:
-        c = StalenessConfig(num_workers=WORKERS, delay=UniformDelay(s_alt))
-        alt_engines[s_alt] = jax.jit(make_sim_step(update_fn, c))
-
-    probe = (jnp.asarray(data.x_train[:1000]), jnp.asarray(data.y_train[:1000]))
-    probe_grad = jax.jit(lambda p: tm.tree_flatten_to_vector(
-        jax.grad(mlp.loss_fn)(p, probe)))
+    batches = ShardedBatches([data.x_train, data.y_train], WORKERS, 32)
     xt, yt = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
-    acc = jax.jit(lambda p: mlp.accuracy(p, xt, yt))
-    observe_j = jax.jit(observe)
+    # no target=: both modes train the full STEPS so final accuracy is
+    # compared at equal training length (the point of the demo).
+    result = Trainer(engine, hooks=hooks).run(
+        iter(batches), steps=STEPS, state=state,
+        eval_fn=lambda p: mlp.accuracy(p, xt, yt), eval_every=50)
 
-    batches = iter(ShardedBatches([data.x_train, data.y_train], WORKERS, 32))
-    final_acc, btt85 = 0.0, None
-    for t in range(STEPS):
-        batch = next(batches)
-        if mode == "gated":
-            allowed = int(ctl["allowed_s"])
-            eng = step_full if allowed >= S else alt_engines[
-                max(k for k in alt_engines if k <= max(allowed, 1))]
-            state, _ = eng(state, batch)
-        else:
-            state, _ = step_full(state, batch)
-
-        if (t + 1) % 10 == 0:
-            cache0 = jax.tree.map(lambda x: x[0], state.caches)
-            g = probe_grad(cache0)
-            monitor, out = observe_j(monitor, g)
-            if mode == "gated":
-                ctl = jax.tree.map(lambda x: x, controller.step(ctl, out["mu"]))
-            if mode == "theorem1":
-                x_vec = tm.tree_flatten_to_vector(cache0)
-                secant = coh.update_secant(secant, x_vec, g)
-                eta = coh.theorem1_stepsize(out["mu"], S, secant.l_hat,
-                                            jnp.float32(t + 1))
-                # re-make the engine's optimizer lr by scaling updates:
-                # (cheap trick: scale the pending update slot contributions)
-        if (t + 1) % 50 == 0:
-            a = float(acc(jax.tree.map(lambda x: x[0], state.caches)))
-            final_acc = a
-            if btt85 is None and a >= 0.85:
-                btt85 = (t + 1) * WORKERS
+    final_acc = result.curve[-1][1] if result.curve else 0.0
+    btt85 = next((b for b, acc in result.curve if acc >= 0.85), None)
     return final_acc, btt85
 
 

@@ -1,44 +1,41 @@
-"""Quickstart: the paper's staleness simulation in ~40 lines.
+"""Quickstart: the paper's staleness simulation through the unified engine.
 
-Train the same DNN under s=0 (synchronous) and s=16 (stale) on 8 simulated
-workers and watch the convergence slowdown (paper Fig. 1).
+One ``EngineConfig(mode=...)`` covers every staleness regime in the repo —
+``simulate`` (the paper's per-worker-cache model), ``stale-psum`` (Theorem-1
+delayed gradients), ``ssp`` (Stale Synchronous Parallel clocks), and ``sync``.
+Here we train the same DNN under s=0 (synchronous) and s=16 (stale) on 8
+simulated workers and watch the convergence slowdown (paper Fig. 1):
+``build_engine`` makes the engine, ``Trainer.run`` steps it to the accuracy
+target and reports batches-to-target — the paper's primary measurement.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import StalenessConfig, UniformDelay, init_sim_state, make_sim_step
 from repro.data import ShardedBatches, synthetic
+from repro.engine import EngineConfig, Trainer, build_engine
 from repro.models import mlp
-from repro.optim import make_sgd_update_fn, paper_default
+from repro.optim import paper_default
 
 
 def batches_to_target(staleness: int, workers: int = 8, target: float = 0.85):
     data = synthetic.teacher_classification(seed=0)
-    cfg_model = mlp.MLPConfig(depth=1)
-    params = mlp.init(jax.random.PRNGKey(0), cfg_model)
+    params = mlp.init(jax.random.PRNGKey(0), mlp.MLPConfig(depth=1))
 
     opt = paper_default("sgd")                      # Table 1: eta = 0.01
-    update_fn = make_sgd_update_fn(mlp.loss_fn, opt)
-    cfg = StalenessConfig(num_workers=workers, delay=UniformDelay(staleness))
-
-    state = init_sim_state(params, opt.init(params), cfg, jax.random.PRNGKey(1))
-    step = jax.jit(make_sim_step(update_fn, cfg))
+    engine = build_engine(mlp.loss_fn, opt, EngineConfig(
+        mode="simulate", num_workers=workers, s=staleness))
+    state = engine.init(jax.random.PRNGKey(1), params=params)
 
     batches = ShardedBatches([data.x_train, data.y_train], workers, 32)
     xt, yt = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
-    acc = jax.jit(lambda p: mlp.accuracy(p, xt, yt))
 
-    for t, batch in enumerate(batches):
-        state, _ = step(state, batch)
-        if (t + 1) % 25 == 0:
-            a = float(acc(jax.tree.map(lambda x: x[0], state.caches)))
-            if a >= target:
-                return (t + 1) * workers
-        if t > 4000:
-            break
-    return None
+    result = Trainer(engine).run(
+        iter(batches), steps=4000, state=state,
+        eval_fn=lambda p: mlp.accuracy(p, xt, yt),
+        eval_every=25, target=target)
+    return result.batches_to_target
 
 
 if __name__ == "__main__":

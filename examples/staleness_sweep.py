@@ -1,10 +1,17 @@
 """Mini reproduction of paper Fig. 2: algorithm sensitivity to staleness.
 
 Sweeps SGD vs Adam over staleness levels on the DNN and prints the
-normalized batches-to-target — SGD robust, Adam fragile.
+normalized batches-to-target — SGD robust, Adam fragile. The experiment
+helpers run on the unified ``repro.engine`` surface (simulate mode); see
+docs/API.md.
 
   PYTHONPATH=src python examples/staleness_sweep.py
 """
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 from benchmarks import common
 
 if __name__ == "__main__":

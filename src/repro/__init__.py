@@ -1,7 +1,8 @@
 """staleness-lab: staleness-aware distributed training framework in JAX.
 
 Reproduces and extends "Toward Understanding the Impact of Staleness in
-Distributed Machine Learning" (ICLR 2019). See DESIGN.md for the system map.
+Distributed Machine Learning" (ICLR 2019). See DESIGN.md for the system map
+and docs/API.md for the unified execution surface (``repro.engine``).
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

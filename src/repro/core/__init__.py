@@ -1,4 +1,13 @@
-"""Core: the paper's staleness model, coherence theory, and SSP semantics."""
+"""Core: the paper's staleness model, coherence theory, and SSP semantics.
+
+NOTE: the per-regime entry points below (``make_sim_step`` /
+``make_stale_train_step`` / ``make_sync_train_step`` / ``simulate_ssp_clocks``)
+remain the implementation substrate, but new code should go through the
+unified execution surface in :mod:`repro.engine`
+(``EngineConfig`` / ``build_engine`` / ``Trainer``) — one mode-parameterised
+API over simulate / stale-psum / ssp / sync instead of four incompatible
+ones.  Everything re-exported here is kept stable for existing callers.
+"""
 from repro.core.delay import (
     ConstantDelay,
     DelayModel,
@@ -22,4 +31,21 @@ from repro.core.coherence import (
     observe,
     probe_gradient,
     theorem1_stepsize,
+)
+from repro.core.stale_sync import (
+    StaleSyncConfig,
+    StaleTrainState,
+    SyncTrainState,
+    init_state,
+    init_sync_state,
+    make_stale_train_step,
+    make_sync_train_step,
+    make_sync_train_step_lean,
+)
+from repro.core.ssp import (
+    SSPConfig,
+    sample_worker_durations,
+    simulate_ssp_clocks,
+    ssp_delay_schedule,
+    ssp_throughput_model,
 )

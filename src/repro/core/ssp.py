@@ -63,14 +63,48 @@ def simulate_ssp_clocks(cfg: SSPConfig, speeds: jax.Array) -> dict:
     }
 
 
+def sample_worker_durations(key: jax.Array, t_steps: int, num_workers: int,
+                            mean_dur: float = 1.0, cv: float = 0.5) -> jax.Array:
+    """Lognormal per-(iteration, worker) work durations with the given mean
+    and coefficient of variation — the straggler model used throughout."""
+    sigma = jnp.sqrt(jnp.log1p(cv ** 2))
+    mu = jnp.log(mean_dur) - sigma ** 2 / 2
+    return jnp.exp(mu + sigma * jax.random.normal(key, (t_steps, num_workers)))
+
+
+def ssp_delay_schedule(cfg: SSPConfig, speeds: jax.Array) -> jax.Array:
+    """Convert the SSP clock discipline into a per-step delay schedule.
+
+    For each (clock c, worker p): when p *starts* clock c, how many clocks
+    behind c is the slowest worker?  That gap is exactly the staleness of the
+    state p reads for its c-th update, so feeding it to the delayed-gradient
+    engine (``StaleSyncConfig(delay_table=...)``) executes SSP as a real
+    training mode rather than an offline simulation.  Values are int32 in
+    ``[0, cfg.bound]`` (the gate guarantees the upper bound), shape [T, P].
+    """
+    sim = simulate_ssp_clocks(cfg, speeds)
+    finishes = jnp.asarray(sim["finish_times"])          # [T, P]
+    starts = finishes - speeds                           # [T, P]
+    t_steps = finishes.shape[0]
+    # done[c, p, q] = clocks worker q completed by the time p starts clock c
+    # = #{k : finish[k, q] <= start[c, p]}. Each worker's finish times are
+    # non-decreasing in the clock index, so this is a searchsorted per q —
+    # O(T P^2 log T) instead of materializing a [T, P, T, P] comparison.
+    done = jax.vmap(  # over worker q's finish column
+        lambda col: jnp.searchsorted(col, starts.reshape(-1) + 1e-9,
+                                     side="right"),
+        in_axes=1, out_axes=1)(finishes)                 # [T*P, P(q)]
+    done = done.reshape(t_steps, cfg.num_workers, cfg.num_workers)
+    gap = jnp.arange(t_steps)[:, None] - jnp.min(done, axis=2)
+    return jnp.clip(gap, 0, cfg.bound).astype(jnp.int32)
+
+
 def ssp_throughput_model(cfg: SSPConfig, mean_dur: float, cv: float,
                          key: jax.Array, t_steps: int = 200) -> dict:
     """Throughput vs bound: sample lognormal worker durations and report the
     makespan speedup of SSP(s) over BSP (s=0) — the 'system throughput' half
     of the paper's statistical-efficiency/throughput trade-off."""
-    sigma = jnp.sqrt(jnp.log1p(cv ** 2))
-    mu = jnp.log(mean_dur) - sigma ** 2 / 2
-    durs = jnp.exp(mu + sigma * jax.random.normal(key, (t_steps, cfg.num_workers)))
+    durs = sample_worker_durations(key, t_steps, cfg.num_workers, mean_dur, cv)
     ssp = simulate_ssp_clocks(cfg, durs)
     bsp = simulate_ssp_clocks(dataclasses.replace(cfg, bound=0), durs)
     return {

@@ -50,10 +50,16 @@ class StaleSyncConfig:
     # x_{k+1} = x_k - eta * grad(x_{tau_k}) update, and the only form whose
     # buffer fits HBM for the 1T-param configs (P-fold smaller).
     per_worker_delays: bool = True
+    # Deterministic per-step delays instead of sampling: int32 [T, P] table
+    # indexed by step mod T. This is how repro.engine runs SSP — the clock
+    # discipline's effective read staleness becomes the delay schedule.
+    delay_table: Optional[Any] = None
 
     def __post_init__(self):
         if self.delay is None:
             object.__setattr__(self, "delay", UniformDelay(self.s))
+        if self.delay_table is not None and not self.per_worker_delays:
+            raise ValueError("delay_table requires per_worker_delays=True")
 
     @property
     def slots(self) -> int:
@@ -106,7 +112,8 @@ def make_stale_train_step(
             lambda x: x.reshape((p, x.shape[0] // p) + x.shape[1:]), batch)
         return jax.vmap(one)(shaped)  # (losses [P], grads [P, ...])
 
-    def step(state: StaleTrainState, batch) -> Tuple[StaleTrainState, dict]:
+    def step(state: StaleTrainState, batch,
+             bound: Optional[jax.Array] = None) -> Tuple[StaleTrainState, dict]:
         key, kdelay = jax.random.split(state.key)
         if cfg.per_worker_delays:
             losses, grads = per_worker_grads(state.params, batch)
@@ -132,7 +139,14 @@ def make_stale_train_step(
                    if cfg.per_worker_delays else gmean)
             staleness = jnp.zeros((p,), jnp.int32)
         elif cfg.per_worker_delays:
-            d = cfg.delay.sample(kdelay, (p,))
+            if cfg.delay_table is not None:
+                table = jnp.asarray(cfg.delay_table, jnp.int32)
+                d = jnp.minimum(table[jnp.mod(state.step, table.shape[0])],
+                                slots - 1)
+            else:
+                d = cfg.delay.sample(kdelay, (p,))
+            if bound is not None:
+                d = jnp.minimum(d, jnp.asarray(bound, jnp.int32))
             d = jnp.minimum(d, state.step)          # no history before step 0
             read = jnp.mod(state.step - d, slots)   # [P]
 
@@ -146,7 +160,10 @@ def make_stale_train_step(
             staleness = d
         else:
             # Theorem-1 form: one delayed AGGREGATE gradient per step.
-            d = jnp.minimum(cfg.delay.sample(kdelay, ()), state.step)
+            d = cfg.delay.sample(kdelay, ())
+            if bound is not None:
+                d = jnp.minimum(d, jnp.asarray(bound, jnp.int32))
+            d = jnp.minimum(d, state.step)
             read = jnp.mod(state.step - d, slots)
             agg = jax.tree.map(
                 lambda buf: jax.lax.dynamic_index_in_dim(

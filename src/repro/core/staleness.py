@@ -139,7 +139,8 @@ def make_sim_step(
     if cfg.server_side and server_apply is None:
         raise ValueError("server_side=True requires a server_apply transform")
 
-    def step(state: SimState, batches: Pytree) -> Tuple[SimState, dict]:
+    def step(state: SimState, batches: Pytree,
+             bound: Optional[jax.Array] = None) -> Tuple[SimState, dict]:
         key, kdelay, kupd = jax.random.split(state.key, 3)
 
         # 1. deliver arrivals scheduled for this iteration.
@@ -164,6 +165,10 @@ def make_sim_step(
 
         # 3. dispatch into the delivery buffer with sampled delays.
         delays = draw_delay_matrix(kdelay, cfg.delay, cfg.num_workers)
+        if bound is not None:
+            # Dynamic staleness control (repro.engine): clamp the sampled
+            # delay to an (inclusive, possibly traced) runtime bound.
+            delays = jnp.minimum(delays, jnp.asarray(bound, jnp.int32))
         pending = _dispatch(pending, updates, delays, cfg.buffer_slots)
 
         new_state = SimState(

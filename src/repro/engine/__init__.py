@@ -1,0 +1,26 @@
+"""repro.engine — one execution surface for every staleness regime.
+
+    from repro.engine import EngineConfig, build_engine, Trainer
+
+    engine = build_engine(loss_fn, optimizer,
+                          EngineConfig(mode="simulate", num_workers=8, s=16))
+    state = engine.init(jax.random.PRNGKey(0), params=params)
+    result = Trainer(engine).run(batches, steps=1000,
+                                 eval_fn=acc, eval_every=25, target=0.85)
+
+See docs/API.md for the mode matrix and the hook points.
+"""
+from repro.engine.api import (
+    MODES,
+    Engine,
+    EngineConfig,
+    EngineState,
+    build_engine,
+)
+from repro.engine.hooks import (
+    CheckpointHook,
+    CoherenceHook,
+    JSONLinesSink,
+    StdoutSink,
+)
+from repro.engine.trainer import Hook, StepContext, Trainer, TrainResult

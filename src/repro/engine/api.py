@@ -1,0 +1,296 @@
+"""Unified execution surface over every staleness regime in the repo.
+
+The paper treats synchronous, bounded-async, and SSP training as points on
+one staleness axis; this module makes the code match: one
+``EngineConfig(mode=...)`` + ``build_engine(...)`` pair replaces the four
+incompatible per-regime APIs (``core/staleness.py``, ``core/stale_sync.py``,
+``core/ssp.py``, and the hand-rolled loops that consumed them).
+
+Modes
+-----
+* ``simulate``   — the paper's Section-3 per-worker-cache simulator
+                   (``core/staleness.py``); batches carry a leading worker
+                   axis ``[P, b, ...]``.
+* ``stale-psum`` — Theorem-1 delayed-gradient data parallelism
+                   (``core/stale_sync.py``); batches are flat global batches
+                   reshaped to per-worker shards inside the step.
+* ``ssp``        — Stale Synchronous Parallel as a *real* execution mode:
+                   ``core/ssp.py`` clock semantics are converted into a
+                   per-step delay schedule fed to the delayed-gradient step.
+* ``sync``       — the buffer-free synchronous baseline (s = 0).
+
+All modes share the same object surface: ``engine.init(key) -> state``,
+``engine.step(state, batch) -> (state, metrics)``, ``engine.params(state)``
+for the evaluation view, and ``engine.with_staleness(state, s)`` for dynamic
+staleness control (the coherence controller clamps the delay bound at
+runtime without rebuilding buffers).  ``Trainer`` (trainer.py) supplies the
+loop + hooks that the benchmarks, the train driver, and the examples share.
+
+Every mode delegates to the existing ``repro.core`` step builders, so legacy
+trajectories are reproduced bit-for-bit (tested in test_engine_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ssp as ssp_lib
+from repro.core import stale_sync, staleness
+from repro.core.delay import DelayModel, UniformDelay
+from repro.optim import optimizers as optlib
+
+Pytree = Any
+
+MODES = ("simulate", "stale-psum", "ssp", "sync")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """One config for every staleness regime.
+
+    ``s`` is the staleness bound: for ``simulate`` it parameterises
+    ``UniformDelay(s)`` (delays r in [0, s-1]) unless ``delay`` overrides it;
+    for ``stale-psum`` it sizes the gradient ring buffer; for ``ssp`` it is
+    the SSP clock-drift bound; ``sync`` ignores it.
+    """
+    mode: str = "sync"
+    num_workers: int = 1
+    s: int = 0
+    delay: Optional[DelayModel] = None   # overrides UniformDelay(s)
+    # stale-psum extras (see StaleSyncConfig):
+    per_worker_delays: bool = True
+    buffer_dtype: Any = jnp.float32
+    # simulate extras (see StalenessConfig):
+    server_side: bool = False
+    loss_takes_key: bool = False         # loss_fn(params, batch, key) losses
+    # ssp extras: worker-speed model the clock schedule is derived from.
+    ssp_speeds: Optional[Any] = None     # [T, P] durations; sampled if None
+    ssp_steps: int = 512
+    ssp_mean_dur: float = 1.0
+    ssp_cv: float = 0.5
+    ssp_seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; have {MODES}")
+        if self.num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if self.s < 0:
+            raise ValueError(f"staleness bound s must be >= 0, got {self.s}")
+        if self.delay is not None and self.mode in ("ssp", "sync"):
+            raise ValueError(
+                f"delay= is not used by mode={self.mode!r} (ssp derives "
+                "delays from the clock schedule; sync has none) — "
+                "misconfiguration rejected rather than silently ignored")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    """Mode-specific state plus the dynamic staleness bound.
+
+    ``bound`` is the inclusive max *delay* currently allowed (clamps whatever
+    the delay model / schedule produces); it starts at the config's static
+    bound and is lowered/raised via ``Engine.with_staleness``.
+    """
+    inner: Pytree
+    bound: jax.Array  # int32
+
+
+@dataclasses.dataclass
+class Engine:
+    """Uniform handle returned by ``build_engine`` — see module docstring."""
+    cfg: EngineConfig
+    mesh: Any = None
+    meta: dict = dataclasses.field(default_factory=dict)
+    # wired by build_engine:
+    _init_inner: Callable = None   # (params, update_state, key) -> inner
+    _step_inner: Callable = None   # (inner, batch, bound) -> (inner, metrics)
+    _params_of: Callable = None    # inner -> params eval view
+    _init_params: Callable = None  # key -> params (None when caller supplies)
+    _max_bound: int = 0
+
+    def __post_init__(self):
+        self._jit_step = jax.jit(
+            lambda state, batch: self._wrap(state, batch))
+
+    def _wrap(self, state: EngineState, batch):
+        inner, metrics = self._step_inner(state.inner, batch, state.bound)
+        return EngineState(inner=inner, bound=state.bound), metrics
+
+    # -- lifecycle ---------------------------------------------------------
+    def init(self, key: jax.Array, params: Pytree = None,
+             update_state: Pytree = None) -> EngineState:
+        """Initialise engine state. ``params`` overrides the model's own
+        initialiser (required when the engine was built from a bare loss
+        function); ``update_state`` overrides the per-worker algorithm state
+        in ``simulate`` mode (defaults to ``optimizer.init(params)``).
+
+        ``key`` seeds both the param init and the engine's delay/update
+        stream, exactly as the legacy drivers did — given the same key the
+        engine reproduces legacy trajectories bit-for-bit (tested)."""
+        if params is None:
+            if self._init_params is None:
+                raise ValueError(
+                    "engine built from a bare loss function: pass params= "
+                    "(or build from a ModelAPI, which knows how to init)")
+            params = self._init_params(key)
+        inner = self._init_inner(params, update_state, key)
+        return EngineState(inner=inner, bound=jnp.int32(self._max_bound))
+
+    def step(self, state: EngineState, batch) -> Tuple[EngineState, dict]:
+        """One engine step (jit-compiled): ``(state, batch) -> (state, metrics)``."""
+        return self._jit_step(state, batch)
+
+    # -- views -------------------------------------------------------------
+    def params(self, state: EngineState) -> Pytree:
+        """The evaluation view of the model (worker 0's cache in ``simulate``
+        mode, the global params otherwise)."""
+        return self._params_of(state.inner)
+
+    def step_count(self, state: EngineState) -> jax.Array:
+        return state.inner.step
+
+    @property
+    def batches_per_step(self) -> int:
+        """Worker batches consumed per engine step (the paper's accounting)."""
+        return self.cfg.num_workers
+
+    # -- dynamic staleness control ----------------------------------------
+    def with_staleness(self, state: EngineState, s) -> EngineState:
+        """Clamp the engine to an effective staleness bound ``s`` (0 =
+        synchronous behavior) without rebuilding buffers. In ``simulate``
+        mode a bound of s means delays r <= s-1 (UniformDelay semantics); in
+        the gradient modes it means gradient age d <= s."""
+        if self.cfg.mode == "simulate":
+            b = jnp.maximum(jnp.asarray(s, jnp.int32) - 1, 0)
+        else:
+            b = jnp.asarray(s, jnp.int32)
+        return dataclasses.replace(
+            state, bound=jnp.minimum(b, jnp.int32(self._max_bound)))
+
+
+def _mean_over_workers(metrics: dict) -> dict:
+    """simulate-mode update_fns report per-worker metric rows [P, ...];
+    reduce to scalars so all modes emit a uniform metrics dict."""
+    return jax.tree.map(
+        lambda v: v.mean(axis=0) if getattr(v, "ndim", 0) >= 1 else v, metrics)
+
+
+def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
+                 cfg: EngineConfig, mesh=None, *,
+                 update_fn=None, server_apply=None) -> Engine:
+    """Build a uniform :class:`Engine` for any mode.
+
+    ``api_or_loss`` is either a ``ModelAPI`` (anything with ``.loss`` and
+    ``.init``) or a bare ``loss_fn(params, batch)`` (pass
+    ``cfg.loss_takes_key=True`` for ``loss_fn(params, batch, key)``).
+    ``update_fn`` bypasses the loss/optimizer adaptation entirely for
+    ``simulate`` mode (e.g. the LDA Gibbs sampler's count-delta updates).
+
+    ``mesh`` is carried on the engine for callers that jit with explicit
+    shardings (``launch/steps.py``); the step math is mesh-agnostic — GSPMD
+    inserts collectives when state is sharded over the data axis.
+    """
+    loss, init_params = None, None
+    if api_or_loss is not None and hasattr(api_or_loss, "loss"):
+        loss = api_or_loss.loss
+        init_params = lambda key: api_or_loss.init(key)[0]
+    elif callable(api_or_loss):
+        loss = api_or_loss
+    elif api_or_loss is not None:
+        raise TypeError(f"api_or_loss must be a ModelAPI or a loss fn, "
+                        f"got {type(api_or_loss)!r}")
+
+    mode = cfg.mode
+    meta = {"mode": mode, "workers": cfg.num_workers, "s": cfg.s}
+
+    if mode == "simulate":
+        if update_fn is None:
+            if loss is None or optimizer is None:
+                raise ValueError("simulate mode needs (loss, optimizer) or "
+                                 "an explicit update_fn")
+            make = (optlib.make_stochastic_update_fn if cfg.loss_takes_key
+                    else optlib.make_sgd_update_fn)
+            update_fn = make(loss, optimizer)
+        sim_cfg = staleness.StalenessConfig(
+            num_workers=cfg.num_workers,
+            delay=cfg.delay or UniformDelay(cfg.s),
+            server_side=cfg.server_side)
+        raw = staleness.make_sim_step(update_fn, sim_cfg,
+                                      server_apply=server_apply)
+
+        def init_inner(params, update_state, key):
+            if update_state is None:
+                update_state = optimizer.init(params)
+            return staleness.init_sim_state(params, update_state, sim_cfg, key)
+
+        return Engine(
+            cfg=cfg, mesh=mesh, meta=meta,
+            _init_inner=init_inner,
+            _step_inner=lambda inner, batch, bound: (
+                lambda out: (out[0], _mean_over_workers(out[1]))
+            )(raw(inner, batch, bound=bound)),
+            _params_of=lambda inner: jax.tree.map(lambda x: x[0], inner.caches),
+            _init_params=init_params,
+            _max_bound=sim_cfg.delay.bound,
+        )
+
+    if mode == "sync":
+        if loss is None or optimizer is None:
+            raise ValueError("sync mode needs (loss, optimizer)")
+        raw = stale_sync.make_sync_train_step_lean(loss, optimizer)
+        return Engine(
+            cfg=cfg, mesh=mesh, meta=meta,
+            _init_inner=lambda params, _ust, _key:
+                stale_sync.init_sync_state(params, optimizer),
+            _step_inner=lambda inner, batch, _bound: raw(inner, batch),
+            _params_of=lambda inner: inner.params,
+            _init_params=init_params,
+            _max_bound=0,
+        )
+
+    # gradient ring-buffer modes: stale-psum and ssp.
+    if loss is None or optimizer is None:
+        raise ValueError(f"{mode} mode needs (loss, optimizer)")
+    if mode == "ssp":
+        speeds = cfg.ssp_speeds
+        if speeds is None:
+            speeds = ssp_lib.sample_worker_durations(
+                jax.random.PRNGKey(cfg.ssp_seed), cfg.ssp_steps,
+                cfg.num_workers, cfg.ssp_mean_dur, cfg.ssp_cv)
+        table = ssp_lib.ssp_delay_schedule(
+            ssp_lib.SSPConfig(num_workers=cfg.num_workers, bound=cfg.s),
+            jnp.asarray(speeds))
+        # schedule delays reach cfg.s, so the ring needs s+1 slots.
+        scfg = stale_sync.StaleSyncConfig(
+            num_workers=cfg.num_workers, s=cfg.s + 1,
+            buffer_dtype=cfg.buffer_dtype, delay_table=table)
+        meta["ssp_schedule"] = table
+        max_bound = cfg.s
+    else:
+        scfg = stale_sync.StaleSyncConfig(
+            num_workers=cfg.num_workers, s=cfg.s, delay=cfg.delay,
+            buffer_dtype=cfg.buffer_dtype,
+            per_worker_delays=cfg.per_worker_delays)
+        if scfg.delay.bound > scfg.slots - 1:
+            # A delay the ring can't hold would silently wrap onto a much
+            # fresher slot while metrics report the large staleness.
+            raise ValueError(
+                f"delay bound {scfg.delay.bound} exceeds the gradient ring "
+                f"({scfg.slots} slots from s={cfg.s}); raise s to at least "
+                f"{scfg.delay.bound + 1}")
+        max_bound = scfg.delay.bound
+    raw = stale_sync.make_stale_train_step(loss, optimizer, scfg)
+    return Engine(
+        cfg=cfg, mesh=mesh, meta=meta,
+        _init_inner=lambda params, _ust, key:
+            stale_sync.init_state(params, optimizer, scfg, key),
+        _step_inner=lambda inner, batch, bound: raw(inner, batch, bound=bound),
+        _params_of=lambda inner: inner.params,
+        _init_params=init_params,
+        _max_bound=max_bound,
+    )

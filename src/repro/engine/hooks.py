@@ -1,0 +1,119 @@
+"""Pluggable side concerns for :class:`repro.engine.Trainer`.
+
+Everything that used to be hand-wired into each training loop hangs off the
+hook surface instead: coherence monitoring / gated staleness control
+(``core/coherence.py``), checkpointing (``checkpoint/checkpoint.py``), and
+metric sinks (stdout JSON lines, JSONL files).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Optional
+
+import jax
+
+from repro import treemath as tm
+from repro.core import coherence as coh
+from repro.engine.trainer import Hook, StepContext, TrainResult
+
+Pytree = Any
+
+
+class CoherenceHook(Hook):
+    """Probe-gradient coherence monitor, optionally closing the loop.
+
+    Every ``every`` steps: compute the probe gradient at the engine's eval
+    params, push it through the coherence monitor (Definition 1), and record
+    ``mu``/``grad_norm`` into emitted log rows.  With a
+    :class:`repro.core.CoherenceController`, the measured mu drives
+    ``engine.with_staleness`` — staleness shrinks when coherence degrades
+    and relaxes back when it recovers (DESIGN.md §8), with no engine
+    rebuild and no buffer reshape.
+    """
+
+    def __init__(self, loss_fn, probe_batch, dim: int, window: int = 8,
+                 every: int = 10, controller=None):
+        self.monitor = coh.init_coherence(dim, window)
+        self._grad = jax.jit(lambda p: tm.tree_flatten_to_vector(
+            jax.grad(loss_fn)(p, probe_batch)))
+        self._observe = jax.jit(coh.observe)
+        self.controller = controller
+        self.ctl = controller.init() if controller is not None else None
+        self.every = max(every, 1)
+        self.last: dict = {}
+        self.mu_trace: list = []
+
+    def on_step(self, ctx: StepContext) -> None:
+        if (ctx.step + 1) % self.every:
+            return
+        g = self._grad(ctx.engine.params(ctx.state))
+        self.monitor, out = self._observe(self.monitor, g)
+        self.last = {"mu": float(out["mu"]),
+                     "grad_norm": float(out["grad_norm"])}
+        if self.controller is not None:
+            self.ctl = self.controller.step(self.ctl, out["mu"])
+            allowed = int(self.ctl["allowed_s"])
+            ctx.state = ctx.engine.with_staleness(ctx.state, allowed)
+            self.last["allowed_s"] = allowed
+        self.mu_trace.append((ctx.step + 1, self.last["mu"]))
+
+    def on_log(self, ctx: StepContext) -> None:
+        ctx.row.update(self.last)
+
+
+class CheckpointHook(Hook):
+    """Save the engine's eval params every ``every`` steps (npz + metadata)."""
+
+    def __init__(self, ckpt_dir: str, every: int, extra: Optional[dict] = None):
+        from repro.checkpoint import checkpoint as ckpt
+        self._ckpt = ckpt
+        self.ckpt_dir = ckpt_dir
+        self.every = max(every, 1)
+        self.extra = extra or {}
+
+    def on_step(self, ctx: StepContext) -> None:
+        if (ctx.step + 1) % self.every:
+            return
+        self._ckpt.save(self._ckpt.step_path(self.ckpt_dir, ctx.step + 1),
+                        ctx.engine.params(ctx.state), step=ctx.step + 1,
+                        extra=self.extra)
+
+
+class StdoutSink(Hook):
+    """Print emitted log rows as JSON lines (the train driver's format)."""
+
+    def on_log(self, ctx: StepContext) -> None:
+        print(json.dumps(ctx.row), flush=True)
+
+
+class JSONLinesSink(Hook):
+    """Append emitted log rows to a .jsonl file; write a summary on end."""
+
+    def __init__(self, path: str, header: Optional[dict] = None):
+        self.path = path
+        self.header = header
+        self._file = None
+
+    def _ensure(self):
+        if self._file is None:
+            os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                        exist_ok=True)
+            self._file = open(self.path, "w")
+            if self.header:
+                self._file.write(json.dumps({"header": self.header}) + "\n")
+
+    def on_log(self, ctx: StepContext) -> None:
+        self._ensure()
+        self._file.write(json.dumps(ctx.row) + "\n")
+        self._file.flush()
+
+    def on_end(self, ctx: StepContext, result: TrainResult) -> None:
+        self._ensure()
+        self._file.write(json.dumps({
+            "summary": {"converged": result.converged,
+                        "batches_to_target": result.batches_to_target,
+                        "wall_s": round(result.wall_s, 2)}}) + "\n")
+        self._file.close()
+        self._file = None

@@ -8,19 +8,24 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # axis_types landed after jax 0.4.x; Auto is the default there anyway.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (CPU host testing)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def data_extent(mesh) -> int:

@@ -1,5 +1,6 @@
 """Training driver: staleness-aware data-parallel training of any registered
-architecture on whatever mesh is available.
+architecture on whatever mesh is available, through the unified
+``repro.engine`` surface.
 
 On the CPU container this runs REDUCED configs on a host mesh (the
 end-to-end example path); on a TPU pod the same driver takes the full
@@ -7,13 +8,16 @@ configs — everything below is mesh-agnostic.
 
   PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
       --steps 200 --stale 4 --batch 16 --seq 128 --coherence
+
+``--mode`` selects the staleness regime explicitly (sync / stale-psum /
+ssp / simulate); the default ``auto`` picks sync when ``--stale 0`` and
+stale-psum otherwise, matching the legacy driver.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -21,28 +25,38 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro import treemath as tm
-from repro.checkpoint import checkpoint as ckpt
 from repro.core import coherence as coh
-from repro.core import stale_sync
 from repro.data.synthetic import token_lm_stream
-from repro.launch.mesh import make_host_mesh
+from repro.engine import (CheckpointHook, CoherenceHook, EngineConfig,
+                          StdoutSink, Trainer, build_engine)
 from repro.optim import optimizers as optlib
 
 
-def make_batch_fn(api, batch: int, seq: int, seed: int):
+def make_batch_fn(api, batch: int, seq: int, seed: int, workers: int = 0):
+    """Fresh synthetic batch every call. Each auxiliary field gets its own
+    per-field-seeded generator and is re-drawn per batch (the legacy driver
+    froze one draw per run — and from generators that shared one seed).
+    With ``workers`` > 0 every leaf is reshaped to [P, batch/P, ...] for the
+    simulate engine's per-worker batch contract."""
     stream = token_lm_stream(seed, api.vocab_real, seq, batch)
     cfg = api.cfg
-    extra = {}
+    gens = {}
     if getattr(cfg, "num_cross_layers", 0):
-        extra["cross_feats"] = np.random.default_rng(seed).standard_normal(
-            (batch, cfg.cross_tokens, cfg.cross_dim)).astype(np.float32)
+        gens["cross_feats"] = (np.random.default_rng([seed, 1]),
+                               (batch, cfg.cross_tokens, cfg.cross_dim))
     if api.family == "encdec":
-        extra["frames"] = np.random.default_rng(seed).standard_normal(
-            (batch, cfg.num_frames, cfg.d_model)).astype(np.float32)
+        gens["frames"] = (np.random.default_rng([seed, 2]),
+                          (batch, cfg.num_frames, cfg.d_model))
 
     def next_batch():
-        return dict({"tokens": jnp.asarray(next(stream))},
-                    **{k: jnp.asarray(v) for k, v in extra.items()})
+        out = {"tokens": jnp.asarray(next(stream))}
+        for name, (rng, shape) in gens.items():
+            out[name] = jnp.asarray(
+                rng.standard_normal(shape).astype(np.float32))
+        if workers:
+            out = {k: v.reshape((workers, v.shape[0] // workers)
+                                + v.shape[1:]) for k, v in out.items()}
+        return out
 
     return next_batch
 
@@ -55,6 +69,9 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--stale", type=int, default=0)
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "sync", "stale-psum", "ssp", "simulate"],
+                    help="staleness regime (auto: sync iff --stale 0)")
     ap.add_argument("--optimizer", default=None)
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--workers", type=int, default=4)
@@ -67,61 +84,57 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
+    mode = args.mode
+    if mode == "auto":
+        mode = "sync" if args.stale == 0 else "stale-psum"
     arch = cfglib.get(args.arch)
     api = arch.api(reduced=args.reduced)
     print(f"arch={args.arch} reduced={args.reduced} family={api.family} "
-          f"stale_s={args.stale} workers={args.workers}")
+          f"mode={mode} stale_s={args.stale} workers={args.workers}")
 
     opt_kwargs = {"lr": args.lr} if args.lr else {}
     opt = optlib.get_optimizer(args.optimizer or arch.train_optimizer,
                                **opt_kwargs)
-    cfg = stale_sync.StaleSyncConfig(num_workers=args.workers, s=args.stale)
-    params, _ = api.init(jax.random.PRNGKey(args.seed))
-    n_params = tm.tree_size(params)
+    if mode == "simulate" and args.batch % args.workers:
+        raise SystemExit("simulate mode needs --batch divisible by --workers")
+    ecfg = EngineConfig(mode=mode, num_workers=args.workers, s=args.stale,
+                        ssp_steps=max(args.steps, 1), ssp_seed=args.seed)
+    engine = build_engine(api, opt, ecfg)
+    state = engine.init(jax.random.PRNGKey(args.seed))
+    n_params = tm.tree_size(engine.params(state))
     print(f"params: {n_params/1e6:.1f}M")
 
-    state = stale_sync.init_state(params, opt, cfg, jax.random.PRNGKey(args.seed))
-    if args.stale == 0:
-        state = stale_sync.init_sync_state(params, opt)
-        step = jax.jit(stale_sync.make_sync_train_step_lean(api.loss, opt))
-    else:
-        step = jax.jit(stale_sync.make_stale_train_step(api.loss, opt, cfg))
+    next_batch = make_batch_fn(
+        api, args.batch, args.seq, args.seed,
+        workers=args.workers if mode == "simulate" else 0)
 
-    next_batch = make_batch_fn(api, args.batch, args.seq, args.seed)
-
-    monitor = None
+    hooks = []
     if args.coherence:
-        dim = n_params
-        monitor = coh.init_coherence(dim, window=max(args.stale, 4))
-        probe = next_batch()
-        probe_grad = jax.jit(lambda p: tm.tree_flatten_to_vector(
-            jax.grad(api.loss)(p, probe)))
-        observe = jax.jit(coh.observe)
+        controller = (coh.CoherenceController(s_max=args.stale)
+                      if args.stale else None)
+        probe = make_batch_fn(api, args.batch, args.seq, args.seed + 1)()
+        hooks.append(CoherenceHook(
+            api.loss, probe, dim=n_params,
+            window=max(args.stale, 4), every=args.log_every,
+            controller=controller))
+    if args.ckpt_every and args.ckpt_dir:
+        hooks.append(CheckpointHook(args.ckpt_dir, args.ckpt_every,
+                                    extra={"arch": args.arch}))
+    hooks.append(StdoutSink())  # sinks last: they see hook-merged rows
 
-    history = []
-    t0 = time.time()
-    for t in range(args.steps):
-        state, metrics = step(state, next_batch())
-        if (t + 1) % args.log_every == 0:
-            row = {"step": t + 1, "loss": float(metrics["loss"]),
-                   "wall_s": round(time.time() - t0, 1)}
-            if monitor is not None:
-                monitor, out = observe(monitor, probe_grad(state.params))
-                row["mu"] = float(out["mu"])
-                row["grad_norm"] = float(out["grad_norm"])
-            history.append(row)
-            print(json.dumps(row), flush=True)
-        if args.ckpt_every and (t + 1) % args.ckpt_every == 0 and args.ckpt_dir:
-            ckpt.save(ckpt.step_path(args.ckpt_dir, t + 1), state.params,
-                      step=t + 1, extra={"arch": args.arch})
+    result = Trainer(engine, hooks=hooks).run(
+        next_batch, args.steps, state=state, log_every=args.log_every)
 
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump({"args": vars(args), "history": history,
+            json.dump({"args": vars(args), "history": result.history,
                        "params_m": n_params / 1e6}, f, indent=1)
-    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s "
-          f"(final loss {history[-1]['loss']:.4f})" if history else "done")
+    if result.history:
+        print(f"done: {args.steps} steps in {result.wall_s:.1f}s "
+              f"(final loss {result.history[-1]['loss']:.4f})")
+    else:
+        print("done")
 
 
 if __name__ == "__main__":

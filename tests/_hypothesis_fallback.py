@@ -1,0 +1,65 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite must collect and run on a bare container (pytest + jax
+only). When ``hypothesis`` is available the property tests use it; when it
+isn't, this shim runs each ``@given`` test on a small deterministic sample
+of the strategy space (bounds, midpoint, and a few seeded draws) so the
+properties still get exercised instead of the whole module being skipped.
+
+Only the strategy subset the suite uses is implemented (``st.integers``).
+Install the real thing via requirements-dev.txt for full coverage.
+"""
+from __future__ import annotations
+
+import random
+
+_FALLBACK_EXAMPLES = 5  # per test; the real hypothesis default is 100
+
+
+class _IntegersStrategy:
+    def __init__(self, min_value, max_value):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def examples(self, n: int, rng: random.Random):
+        vals = [self.min_value, self.max_value,
+                (self.min_value + self.max_value) // 2]
+        while len(vals) < n:
+            vals.append(rng.randint(self.min_value, self.max_value))
+        return vals[:n]
+
+
+class st:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _IntegersStrategy(min_value, max_value)
+
+
+def settings(*_args, **_kwargs):
+    """Accepted and ignored (max_examples/deadline tuning is hypothesis-only)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Run the test over a fixed grid of per-strategy examples (elementwise,
+    seeded by the test name, so failures reproduce)."""
+    def deco(fn):
+        def wrapper():
+            rng = random.Random(fn.__name__)
+            columns = {name: strat.examples(_FALLBACK_EXAMPLES, rng)
+                       for name, strat in strategies.items()}
+            for i in range(_FALLBACK_EXAMPLES):
+                drawn = {name: col[i] for name, col in columns.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): {drawn}") from e
+        # NOT functools.wraps: pytest would follow __wrapped__ back to the
+        # original signature and demand fixtures for the strategy args.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

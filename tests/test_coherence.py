@@ -2,8 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep: deterministic fallback (see the shim)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import coherence as coh
 

@@ -14,7 +14,9 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def run_sub(code: str, timeout=900):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # Forced host devices require the CPU platform; pinning it also skips
+    # the (slow, failing) TPU auto-detection on accelerator-image containers.
+    env["JAX_PLATFORMS"] = "cpu"
     return subprocess.run([sys.executable, "-c", code], capture_output=True,
                           text=True, timeout=timeout, env=env)
 
@@ -58,8 +60,7 @@ def test_sim_engine_sharded_equals_unsharded():
         ref = np.asarray(st.caches["w"])
 
         # sharded over an (8,)-data mesh: worker axis split across devices
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         shard = NamedSharding(mesh, P("data"))
         st = jax.tree.map(
             lambda x: jax.device_put(x, NamedSharding(mesh, P("data", *([None] * (x.ndim - 1)))))

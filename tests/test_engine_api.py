@@ -1,0 +1,184 @@
+"""Unified engine API: mode equivalence against the legacy per-regime APIs.
+
+The contract: ``repro.engine`` is a *surface* refactor — every mode must
+reproduce the legacy trajectory bit-for-bit on a fixed seed, sync must equal
+stale-psum at s=0, and the SSP mode's effective delays must match the clock
+simulation it is derived from.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ssp as ssp_lib
+from repro.core import stale_sync, staleness
+from repro.core.delay import UniformDelay
+from repro.engine import (EngineConfig, JSONLinesSink, Trainer, build_engine)
+from repro.optim import make_sgd_update_fn, sgd
+
+
+def quad_loss(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] - y) ** 2)
+
+
+W_TRUE = jnp.array([1.0, -2.0, 3.0, 0.5])
+
+
+def make_batches(key, P, per, n):
+    out = []
+    for _ in range(n):
+        key, kb = jax.random.split(key)
+        x = jax.random.normal(kb, (P * per, 4))
+        out.append((x, x @ W_TRUE))
+    return out
+
+
+def worker_shaped(batches, P):
+    return [tuple(a.reshape(P, -1, *a.shape[1:]) for a in b) for b in batches]
+
+
+def test_sync_equals_stale_psum_s0():
+    """mode="sync" == mode="stale-psum" with s=0, through one surface."""
+    P = 4
+    params = {"w": jnp.zeros((4,))}
+    batches = make_batches(jax.random.PRNGKey(1), P, 8, 12)
+    trajs = []
+    for mode in ("sync", "stale-psum"):
+        eng = build_engine(quad_loss, sgd(0.05),
+                           EngineConfig(mode=mode, num_workers=P, s=0))
+        st = eng.init(jax.random.PRNGKey(0), params=params)
+        for b in batches:
+            st, _ = eng.step(st, b)
+        trajs.append(np.asarray(eng.params(st)["w"]))
+    np.testing.assert_allclose(trajs[0], trajs[1], rtol=1e-6, atol=1e-7)
+
+
+def test_simulate_mode_matches_legacy_bitwise():
+    """Engine simulate mode == core.staleness.make_sim_step, bit for bit."""
+    P, s = 3, 4
+    params = {"w": jnp.zeros((4,))}
+    opt = sgd(0.05)
+    batches = worker_shaped(make_batches(jax.random.PRNGKey(2), P, 8, 15), P)
+
+    scfg = staleness.StalenessConfig(num_workers=P, delay=UniformDelay(s))
+    legacy_step = jax.jit(staleness.make_sim_step(
+        make_sgd_update_fn(quad_loss, opt), scfg))
+    legacy = staleness.init_sim_state(params, opt.init(params), scfg,
+                                      jax.random.PRNGKey(7))
+
+    eng = build_engine(quad_loss, opt,
+                       EngineConfig(mode="simulate", num_workers=P, s=s))
+    st = eng.init(jax.random.PRNGKey(7), params=params)
+
+    for b in batches:
+        legacy, _ = legacy_step(legacy, b)
+        st, _ = eng.step(st, b)
+    np.testing.assert_array_equal(np.asarray(legacy.caches["w"]),
+                                  np.asarray(st.inner.caches["w"]))
+    np.testing.assert_array_equal(np.asarray(legacy.pending["w"]),
+                                  np.asarray(st.inner.pending["w"]))
+
+
+def test_stale_psum_mode_matches_legacy_bitwise():
+    """Engine stale-psum mode == core.stale_sync.make_stale_train_step."""
+    P, s = 4, 5
+    params = {"w": jnp.zeros((4,))}
+    opt = sgd(0.05)
+    batches = make_batches(jax.random.PRNGKey(3), P, 8, 15)
+
+    cfg = stale_sync.StaleSyncConfig(num_workers=P, s=s)
+    legacy_step = jax.jit(stale_sync.make_stale_train_step(quad_loss, opt, cfg))
+    legacy = stale_sync.init_state(params, opt, cfg, jax.random.PRNGKey(9))
+
+    eng = build_engine(quad_loss, opt,
+                       EngineConfig(mode="stale-psum", num_workers=P, s=s))
+    st = eng.init(jax.random.PRNGKey(9), params=params)
+
+    for b in batches:
+        legacy, lm = legacy_step(legacy, b)
+        st, em = eng.step(st, b)
+        np.testing.assert_array_equal(np.asarray(lm["mean_staleness"]),
+                                      np.asarray(em["mean_staleness"]))
+    np.testing.assert_array_equal(np.asarray(legacy.params["w"]),
+                                  np.asarray(st.inner.params["w"]))
+
+
+def test_ssp_mode_delays_match_clock_simulation():
+    """The engine's per-step effective staleness equals the SSP schedule
+    derived from simulate_ssp_clocks (clamped by available history)."""
+    P, bound, T = 4, 3, 40
+    speeds = ssp_lib.sample_worker_durations(jax.random.PRNGKey(4), T, P,
+                                             mean_dur=1.0, cv=0.8)
+    sched = np.asarray(ssp_lib.ssp_delay_schedule(
+        ssp_lib.SSPConfig(num_workers=P, bound=bound), speeds))
+    assert sched.shape == (T, P)
+    assert sched.min() >= 0 and sched.max() <= bound
+    assert sched.max() > 0, "straggly speeds must induce nonzero staleness"
+
+    eng = build_engine(quad_loss, sgd(0.05), EngineConfig(
+        mode="ssp", num_workers=P, s=bound, ssp_speeds=speeds))
+    np.testing.assert_array_equal(np.asarray(eng.meta["ssp_schedule"]), sched)
+
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((4,))})
+    for k, b in enumerate(make_batches(jax.random.PRNGKey(5), P, 8, T)):
+        st, m = eng.step(st, b)
+        expect = np.minimum(sched[k], k).mean()
+        np.testing.assert_allclose(float(m["mean_staleness"]), expect,
+                                   rtol=1e-6)
+
+
+def test_dynamic_staleness_bound():
+    """with_staleness clamps the live delay distribution (the coherence
+    controller's lever): bound 0 behaves synchronously from the next step."""
+    P, s = 4, 6
+    eng = build_engine(quad_loss, sgd(0.05),
+                       EngineConfig(mode="stale-psum", num_workers=P, s=s))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((4,))})
+    batches = make_batches(jax.random.PRNGKey(6), P, 8, 30)
+    seen_stale = 0.0
+    for b in batches[:15]:
+        st, m = eng.step(st, b)
+        seen_stale += float(m["mean_staleness"])
+    assert seen_stale > 0.0
+    st = eng.with_staleness(st, 0)
+    for b in batches[15:]:
+        st, m = eng.step(st, b)
+        assert float(m["mean_staleness"]) == 0.0
+
+
+def test_trainer_target_curve_and_sink(tmp_path):
+    """Trainer stops at the quality target with the paper's batch accounting
+    and the JSONL sink records rows + a summary."""
+    P = 4
+    eng = build_engine(quad_loss, sgd(0.1),
+                       EngineConfig(mode="simulate", num_workers=P, s=2))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((4,))})
+    batches = worker_shaped(make_batches(jax.random.PRNGKey(8), P, 8, 300), P)
+    xe = jax.random.normal(jax.random.PRNGKey(11), (64, 4))
+    eval_fn = lambda p: jnp.mean((xe @ p["w"] - xe @ W_TRUE) ** 2)
+
+    sink = JSONLinesSink(str(tmp_path / "log.jsonl"))
+    res = Trainer(eng, hooks=[sink]).run(
+        iter(batches), 300, state=st, eval_fn=eval_fn, eval_every=5,
+        target=1e-3, higher_better=False, log_every=10)
+    assert res.converged
+    assert res.batches_to_target == len(res.curve) * 5 * P
+    assert res.curve[-1][1] <= 1e-3
+    lines = (tmp_path / "log.jsonl").read_text().strip().splitlines()
+    import json as _json
+    rows = [_json.loads(l) for l in lines]
+    assert any("loss" in r for r in rows)
+    assert rows[-1]["summary"]["converged"] is True
+
+
+def test_engine_init_requires_params_for_bare_loss():
+    eng = build_engine(quad_loss, sgd(0.1),
+                       EngineConfig(mode="sync", num_workers=1))
+    try:
+        eng.init(jax.random.PRNGKey(0))
+    except ValueError as e:
+        assert "params" in str(e)
+    else:
+        raise AssertionError("expected ValueError without params")
