@@ -1,0 +1,46 @@
+"""Plan/lower/compile latency for engine-planned steps (host mesh).
+
+Times the three phases every execution path pays before the first step —
+building the (arch x shape x mesh) sharding plan, lowering the planned step,
+and compiling it — across staleness regimes. The dry-run pays these on the
+production mesh; this benchmark tracks them on the CPU host mesh so planner
+regressions show up in CI-sized runs.
+
+  PYTHONPATH=src python -m benchmarks.run --only lowering
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import InputShape
+from repro.engine import plan as planlib
+from repro.launch import mesh as meshlib
+
+ARCHS = ("deepseek-7b", "mamba2-1.3b")
+MODES = ("sync", "stale-psum", "ssp", "simulate")
+SHAPE = InputShape("bench_lower", seq_len=32, global_batch=4, kind="train")
+
+
+def main(quick: bool = True, out=None):
+    mesh = meshlib.make_host_mesh(1, 1)
+    modes = MODES[:2] if quick else MODES
+    print("arch,mode,plan_s,lower_s,compile_s")
+    for arch_id in ARCHS:
+        for mode in modes:
+            t0 = time.time()
+            engine = planlib.make_train_engine(
+                arch_id, SHAPE, mesh, mode=mode, stale_s=2, num_workers=2,
+                reduced=True, ssp_steps=16)
+            t_plan = time.time() - t0
+            t0 = time.time()
+            lowered = engine.lowered_step()
+            t_lower = time.time() - t0
+            t0 = time.time()
+            lowered.compile()
+            t_compile = time.time() - t0
+            print(f"{arch_id},{mode},{t_plan:.2f},{t_lower:.2f},"
+                  f"{t_compile:.2f}", flush=True)
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -16,7 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig1|fig2|fig3|fig4|fig5|theorem1|kernels|roofline")
+                    help="fig1|fig2|fig3|fig4|fig5|theorem1|kernels|roofline"
+                         "|lowering")
     args = ap.parse_args()
     quick = not args.full
     os.makedirs("experiments", exist_ok=True)
@@ -52,6 +53,8 @@ def main() -> None:
             quick=quick, out="experiments/theorem1.json"),
         "kernels": kernels_bench.main,
         "roofline": roofline,
+        "lowering": lambda: __import__(
+            "benchmarks.lowering_bench", fromlist=["main"]).main(quick=quick),
     }
 
     names = [args.only] if args.only else list(suite)

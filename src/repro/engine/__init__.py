@@ -23,4 +23,10 @@ from repro.engine.hooks import (
     JSONLinesSink,
     StdoutSink,
 )
+from repro.engine.plan import (
+    Plan,
+    make_train_engine,
+    plan_decode,
+    plan_prefill,
+)
 from repro.engine.trainer import Hook, StepContext, Trainer, TrainResult

@@ -112,10 +112,19 @@ class Engine:
     _params_of: Callable = None    # inner -> params eval view
     _init_params: Callable = None  # key -> params (None when caller supplies)
     _max_bound: int = 0
+    _plan: Any = None              # sharding plan (engine/plan.py), if any
 
     def __post_init__(self):
         self._jit_step = jax.jit(
             lambda state, batch: self._wrap(state, batch))
+
+    def _attach_plan(self, plan) -> None:
+        """Adopt a sharding plan: the jitted step gains explicit in/out
+        NamedShardings so state and batches are placed on the mesh."""
+        self._plan = plan
+        self._jit_step = jax.jit(self._wrap,
+                                 in_shardings=plan.in_shardings,
+                                 out_shardings=plan.out_shardings)
 
     def _wrap(self, state: EngineState, batch):
         inner, metrics = self._step_inner(state.inner, batch, state.bound)
@@ -144,6 +153,21 @@ class Engine:
     def step(self, state: EngineState, batch) -> Tuple[EngineState, dict]:
         """One engine step (jit-compiled): ``(state, batch) -> (state, metrics)``."""
         return self._jit_step(state, batch)
+
+    # -- sharding plan -----------------------------------------------------
+    def plan(self):
+        """The (arch x shape x mesh) sharding plan — abstract args plus
+        NamedShardings for one step (see ``repro.engine.plan.Plan``)."""
+        if self._plan is None:
+            raise ValueError(
+                "engine has no sharding plan: build it with "
+                "build_engine(..., mesh=mesh, arch=arch, shape=shape) or "
+                "repro.engine.plan.make_train_engine(...)")
+        return self._plan
+
+    def lowered_step(self):
+        """Lower one sharded step on the engine's mesh (dry-run entry)."""
+        return self.plan().lower(self.mesh)
 
     # -- views -------------------------------------------------------------
     def params(self, state: EngineState) -> Pytree:
@@ -182,7 +206,8 @@ def _mean_over_workers(metrics: dict) -> dict:
 
 def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
                  cfg: EngineConfig, mesh=None, *,
-                 update_fn=None, server_apply=None) -> Engine:
+                 update_fn=None, server_apply=None,
+                 arch=None, shape=None, rules=None) -> Engine:
     """Build a uniform :class:`Engine` for any mode.
 
     ``api_or_loss`` is either a ``ModelAPI`` (anything with ``.loss`` and
@@ -191,9 +216,13 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
     ``update_fn`` bypasses the loss/optimizer adaptation entirely for
     ``simulate`` mode (e.g. the LDA Gibbs sampler's count-delta updates).
 
-    ``mesh`` is carried on the engine for callers that jit with explicit
-    shardings (``launch/steps.py``); the step math is mesh-agnostic — GSPMD
-    inserts collectives when state is sharded over the data axis.
+    ``mesh`` makes the engine mesh-aware: together with ``shape`` (an
+    ``InputShape`` or name) and optionally ``arch`` (ArchDef or arch_id, for
+    FSDP placement) it computes the full sharding plan — ``engine.plan()``
+    and ``engine.lowered_step()`` — and jits the step with explicit
+    NamedShardings (see ``repro/engine/plan.py``). The step math itself is
+    mesh-agnostic — GSPMD inserts collectives when state is sharded over the
+    data axis.
     """
     loss, init_params = None, None
     if api_or_loss is not None and hasattr(api_or_loss, "loss"):
@@ -207,6 +236,14 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
 
     mode = cfg.mode
     meta = {"mode": mode, "workers": cfg.num_workers, "s": cfg.s}
+
+    def _finish(engine: Engine) -> Engine:
+        if mesh is not None and shape is not None:
+            from repro.engine import plan as plan_lib  # lazy: plan imports us
+            arch_id = getattr(arch, "arch_id", arch)
+            plan_lib.attach_train_plan(engine, api_or_loss, shape,
+                                       arch_id=arch_id, rules=rules)
+        return engine
 
     if mode == "simulate":
         if update_fn is None:
@@ -228,7 +265,7 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
                 update_state = optimizer.init(params)
             return staleness.init_sim_state(params, update_state, sim_cfg, key)
 
-        return Engine(
+        return _finish(Engine(
             cfg=cfg, mesh=mesh, meta=meta,
             _init_inner=init_inner,
             _step_inner=lambda inner, batch, bound: (
@@ -237,13 +274,13 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
             _params_of=lambda inner: jax.tree.map(lambda x: x[0], inner.caches),
             _init_params=init_params,
             _max_bound=sim_cfg.delay.bound,
-        )
+        ))
 
     if mode == "sync":
         if loss is None or optimizer is None:
             raise ValueError("sync mode needs (loss, optimizer)")
         raw = stale_sync.make_sync_train_step_lean(loss, optimizer)
-        return Engine(
+        return _finish(Engine(
             cfg=cfg, mesh=mesh, meta=meta,
             _init_inner=lambda params, _ust, _key:
                 stale_sync.init_sync_state(params, optimizer),
@@ -251,7 +288,7 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
             _params_of=lambda inner: inner.params,
             _init_params=init_params,
             _max_bound=0,
-        )
+        ))
 
     # gradient ring-buffer modes: stale-psum and ssp.
     if loss is None or optimizer is None:
@@ -285,7 +322,7 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
                 f"{scfg.delay.bound + 1}")
         max_bound = scfg.delay.bound
     raw = stale_sync.make_stale_train_step(loss, optimizer, scfg)
-    return Engine(
+    return _finish(Engine(
         cfg=cfg, mesh=mesh, meta=meta,
         _init_inner=lambda params, _ust, key:
             stale_sync.init_state(params, optimizer, scfg, key),
@@ -293,4 +330,4 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
         _params_of=lambda inner: inner.params,
         _init_params=init_params,
         _max_bound=max_bound,
-    )
+    ))

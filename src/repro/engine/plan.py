@@ -1,0 +1,407 @@
+"""Mesh-aware sharding planner: (arch x input-shape x mesh) -> :class:`Plan`.
+
+This module is what used to live in ``launch/steps.py``, folded into the
+engine so every execution path — the dry-run, the trainer, the server, and
+the benchmarks — lowers steps through ONE planning layer. A ``Plan`` bundles
+a jit-able step function with its abstract arguments (ShapeDtypeStructs,
+built via ``eval_shape`` — nothing here allocates device memory) and the
+NamedShardings for inputs and outputs.
+
+Train plans wrap a :class:`repro.engine.Engine`: the planned function is the
+engine's own EngineState-level step, so the dynamic staleness bound and the
+coherence-controller hook path work unchanged under sharded state. Placement
+comes from ``sharding/rules.py`` — FSDP archs get the ZeRO-style
+"embed" -> data rule; per-worker gradient ring buffers and simulate-mode
+worker caches shard their leading worker axis over ("pod","data") with
+model-axis-only rules on the parameter dims (a spec may not use a mesh axis
+twice).
+
+Entry points
+------------
+* ``build_engine(api, opt, cfg, mesh=mesh, arch=arch, shape=shape)``
+  attaches a train plan to the returned engine (``engine.plan()`` /
+  ``engine.lowered_step()``).
+* ``make_train_engine(arch, shape, mesh, ...)`` — the one-call form the
+  drivers use (legacy ``steps.build_train_step`` semantics).
+* ``plan_prefill`` / ``plan_decode`` — inference step plans (no engine).
+* ``build(arch_id, shape_name, mesh, ...)`` — kind dispatcher, the shape of
+  the old ``steps.build``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from repro import configs as cfglib
+from repro.configs.base import SHAPES, ArchDef, InputShape, ModelAPI
+from repro.core import stale_sync, staleness
+from repro.engine.api import Engine, EngineConfig, EngineState
+from repro.optim import optimizers as optlib
+from repro.sharding import rules as rules_lib
+from repro.sharding.rules import FSDP_ARCHS  # noqa: F401  (re-exported)
+
+ShapeLike = Union[str, InputShape]
+
+
+@dataclasses.dataclass
+class Plan:
+    """Everything needed to lower one step (the old ``steps.Built``)."""
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs (positionally matching fn)
+    in_shardings: tuple
+    out_shardings: Any          # or None to let GSPMD choose outputs
+    meta: dict
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings)
+
+    def lower(self, mesh=None):
+        with (mesh if mesh is not None else contextlib.nullcontext()):
+            return self.jit().lower(*self.args)
+
+
+def mode_label(kind: str, mode: Optional[str] = None,
+               stale_s: Optional[int] = None) -> str:
+    """The dry-run record key's mode component — shared by the planner and
+    ``launch/dryrun.py`` so records stay idempotent across the refactor."""
+    if kind != "train":
+        return kind
+    if mode in (None, "auto"):
+        return f"stale_psum(s={stale_s})" if stale_s else "sync"
+    if mode == "sync":
+        return "sync"
+    name = "stale_psum" if mode == "stale-psum" else mode
+    return f"{name}(s={stale_s})"
+
+
+# -- abstract state/axes helpers (moved from launch/steps.py) ---------------
+
+def captured_axes(fn_returning_tree_and_axes):
+    """eval_shape a ``key -> (tree, axes)`` initializer, returning both the
+    ShapeDtypeStruct tree and the (static) logical-axes tree."""
+    captured = {}
+
+    def go(key):
+        tree, axes = fn_returning_tree_and_axes(key)
+        captured["axes"] = axes
+        return tree
+
+    shapes = jax.eval_shape(go, jax.random.PRNGKey(0))
+    return shapes, captured["axes"]
+
+
+def _is_axes_leaf(x):
+    return (isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def _shardings(axes_tree, mesh, rules):
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, rules_lib.spec_for(a, mesh, rules)),
+        axes_tree, is_leaf=_is_axes_leaf)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, PS())
+
+
+def _opt_state_shardings(opt_state_shapes, params_shardings, mesh):
+    """Moment trees mirror params; scalars replicate."""
+    flat_params = jax.tree.leaves(params_shardings)
+
+    def assign(subtree):
+        leaves = jax.tree.leaves(subtree)
+        if len(leaves) == len(flat_params):
+            treedef = jax.tree.structure(subtree)
+            return jax.tree.unflatten(treedef, flat_params)
+        return jax.tree.map(lambda _: _replicated(mesh), subtree)
+
+    return {k: assign(v) if isinstance(v, dict) or jax.tree.structure(v).num_leaves > 1
+            else _replicated(mesh)
+            for k, v in opt_state_shapes.items()}
+
+
+def _batch_struct_and_shardings(api: ModelAPI, shape: InputShape, mesh, rules):
+    spec = api.batch_spec(shape)
+    axes = api.batch_axes(shape)
+    shardings = {k: NamedSharding(mesh, rules_lib.spec_for(axes[k], mesh, rules))
+                 for k in spec}
+    return spec, shardings
+
+
+def _lead(mesh, wax, *rest):
+    """PS with an optional leading worker axis followed by ``rest`` parts."""
+    return NamedSharding(mesh, PS(wax, *rest))
+
+
+# -- the train plan ---------------------------------------------------------
+
+def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
+                      arch_id: Optional[str] = None,
+                      rules: Optional[dict] = None) -> Plan:
+    """Compute the full sharding plan for a train engine and attach it.
+
+    The planned fn is the engine's EngineState-level step; state and batch
+    structures come from ``eval_shape`` over ``engine.init`` (no device
+    memory). Called by ``build_engine`` when ``mesh`` and ``shape`` are
+    given.
+    """
+    mesh = engine.mesh
+    if mesh is None:
+        raise ValueError("attach_train_plan needs an engine built with mesh=")
+    if not (hasattr(api, "init") and hasattr(api, "batch_spec")):
+        raise ValueError(
+            "sharding plans need a ModelAPI (init/batch_spec/batch_axes) to "
+            "derive state and batch structures; got a bare loss function — "
+            "build the engine without shape=, or pass a ModelAPI")
+    shape = SHAPES[shape] if isinstance(shape, str) else shape
+    cfg = engine.cfg
+    p = cfg.num_workers
+    fsdp = arch_id in rules_lib.FSDP_ARCHS
+    rules = rules or rules_lib.rules_for_arch(arch_id, shape=shape, mesh=mesh)
+    wax = rules_lib.worker_axes(mesh)
+    if wax is not None and p % rules_lib.data_extent(mesh):
+        wax = None  # jit args must divide evenly; replicate the worker axis
+
+    params_shapes, params_axes = captured_axes(api.init)
+    params_sh = _shardings(params_axes, mesh, rules)
+    # Reuse the params structs so the (expensive, for 1T configs) abstract
+    # trace of api.init is paid once, not again inside engine.init.
+    state_struct = jax.eval_shape(lambda k, p: engine.init(k, params=p),
+                                  jax.random.PRNGKey(0), params_shapes)
+    inner = state_struct.inner
+    opt_sh = _opt_state_shardings(inner.opt_state, params_sh, mesh) \
+        if hasattr(inner, "opt_state") else None
+
+    if cfg.mode == "sync":
+        inner_sh = stale_sync.SyncTrainState(
+            params=params_sh, opt_state=opt_sh, step=_replicated(mesh))
+    elif cfg.mode in ("stale-psum", "ssp"):
+        per_worker = cfg.mode == "ssp" or cfg.per_worker_delays
+        # A per-worker buffer spends the data axis on its worker dim, so its
+        # param dims must not reuse it (FSDP rules would).
+        buf_rules = rules_lib.strip_data(rules) if (per_worker and fsdp) else rules
+
+        def buf_shard(a):
+            base = rules_lib.spec_for(a, mesh, buf_rules)
+            if per_worker:
+                return _lead(mesh, None, wax, *base)
+            return _lead(mesh, None, *base)
+
+        gbuf_sh = jax.tree.map(buf_shard, params_axes, is_leaf=_is_axes_leaf)
+        inner_sh = stale_sync.StaleTrainState(
+            params=params_sh, opt_state=opt_sh, gbuf=gbuf_sh,
+            step=_replicated(mesh), key=_replicated(mesh))
+    elif cfg.mode == "simulate":
+        # [P, ...] worker caches: leading axis over data, model-only rules on
+        # the param dims (the data axis is already spent on the worker dim).
+        sim_rules = rules_lib.strip_data(rules)
+        cache_sh = jax.tree.map(
+            lambda a: _lead(mesh, wax, *rules_lib.spec_for(a, mesh, sim_rules)),
+            params_axes, is_leaf=_is_axes_leaf)
+        pend_sh = jax.tree.map(
+            lambda a: _lead(mesh, wax, None,
+                            *rules_lib.spec_for(a, mesh, sim_rules)),
+            params_axes, is_leaf=_is_axes_leaf)
+
+        def lead_only(x):
+            return _lead(mesh, wax, *([None] * (x.ndim - 1)))
+
+        inner_sh = staleness.SimState(
+            caches=cache_sh, pending=pend_sh,
+            update_state=jax.tree.map(lead_only, inner.update_state),
+            server_state=jax.tree.map(lead_only, inner.server_state),
+            step=_replicated(mesh), key=_replicated(mesh))
+    else:  # pragma: no cover — EngineConfig validates modes
+        raise ValueError(f"no sharding plan for mode {cfg.mode!r}")
+
+    if cfg.mode == "simulate":
+        if shape.global_batch % p:
+            raise ValueError(
+                f"simulate mode needs global_batch divisible by num_workers "
+                f"({shape.global_batch} % {p})")
+        per = dataclasses.replace(shape, global_batch=shape.global_batch // p)
+        flat_struct = api.batch_spec(per)
+        batch_struct = {
+            k: jax.ShapeDtypeStruct((p,) + s.shape, s.dtype)
+            for k, s in flat_struct.items()}
+        batch_sh = {k: _lead(mesh, wax, *([None] * s.ndim))
+                    for k, s in flat_struct.items()}
+    else:
+        batch_struct, batch_sh = _batch_struct_and_shardings(
+            api, shape, mesh, rules)
+
+    state_sh = EngineState(inner=inner_sh, bound=_replicated(mesh))
+    plan = Plan(
+        fn=engine._wrap,
+        args=(state_struct, batch_struct),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        meta={"arch": arch_id, "shape": shape.name, "kind": "train",
+              "mode": mode_label("train", cfg.mode, cfg.s),
+              "engine_mode": cfg.mode, "s": cfg.s, "workers": p},
+    )
+    engine._attach_plan(plan)
+    return plan
+
+
+def make_train_engine(arch: Union[str, ArchDef], shape: ShapeLike, mesh, *,
+                      ecfg: Optional[EngineConfig] = None,
+                      mode: Optional[str] = None,
+                      stale_s: Optional[int] = None,
+                      num_workers: Optional[int] = None,
+                      optimizer_name: Optional[str] = None,
+                      remat_override: Optional[bool] = None,
+                      overrides: Optional[dict] = None,
+                      reduced: bool = False,
+                      rules: Optional[dict] = None,
+                      **engine_kw) -> Engine:
+    """One call from (arch x shape x mesh) to a plan-carrying train engine.
+
+    ``stale_s`` keeps the legacy ``steps.build_train_step`` semantics: None/0
+    -> the synchronous baseline, >= 1 -> the paper's stale-psum step with
+    that bound (unless ``mode`` selects another regime explicitly). Extra
+    ``engine_kw`` (``ssp_steps``, ``delay=...``, ...) land on EngineConfig;
+    pass a full ``ecfg`` to control everything.
+    """
+    from repro.engine.api import build_engine  # local: api lazily imports us
+
+    arch = cfglib.get(arch) if isinstance(arch, str) else arch
+    shape = SHAPES[shape] if isinstance(shape, str) else shape
+    assert shape.kind == "train", shape.name
+    overrides = dict(overrides or {})
+    if remat_override is not None:
+        overrides["remat"] = remat_override
+    api = arch.api(reduced=reduced, overrides=overrides or None)
+    opt_name = optimizer_name or arch.train_optimizer
+    opt = optlib.get_optimizer(opt_name)
+
+    if ecfg is not None:
+        clashing = {k: v for k, v in dict(
+            mode=mode, stale_s=stale_s, num_workers=num_workers,
+            **engine_kw).items() if v is not None}
+        if clashing:
+            raise ValueError(
+                f"ecfg= fully specifies the engine; also passing "
+                f"{sorted(clashing)} would be silently ignored")
+    if ecfg is None:
+        if mode in (None, "auto"):
+            mode = "sync" if not stale_s else "stale-psum"
+        s = 0 if mode == "sync" else (
+            stale_s if stale_s is not None else arch.stale_s_default)
+        kw = dict(engine_kw)
+        if mode == "stale-psum":
+            # FSDP archs shard params over 'data' already, so the per-worker
+            # buffer axis cannot also use it; they get the aggregate-buffer
+            # form (the Theorem-1 single-tau update — P-fold less memory).
+            kw.setdefault("per_worker_delays",
+                          arch.arch_id not in rules_lib.FSDP_ARCHS)
+        ecfg = EngineConfig(
+            mode=mode, s=s,
+            num_workers=num_workers or rules_lib.data_extent(mesh),
+            buffer_dtype=getattr(api.cfg, "param_dtype", jnp.float32), **kw)
+
+    engine = build_engine(api, opt, ecfg, mesh=mesh, arch=arch, shape=shape,
+                          rules=rules)
+    engine.plan().meta["optimizer"] = opt_name
+    return engine
+
+
+# -- inference plans (no staleness, hence no engine) ------------------------
+
+def _resolve(arch, shape, reduced, overrides, long_ctx=False):
+    arch = cfglib.get(arch) if isinstance(arch, str) else arch
+    shape = SHAPES[shape] if isinstance(shape, str) else shape
+    api = arch.api(reduced=reduced, long_ctx=long_ctx, overrides=overrides)
+    return arch, shape, api
+
+
+def plan_prefill(arch: Union[str, ArchDef], shape: ShapeLike, mesh,
+                 overrides: Optional[dict] = None,
+                 reduced: bool = False) -> Plan:
+    arch, shape, api = _resolve(arch, shape, reduced, overrides)
+    assert shape.kind == "prefill", shape.name
+    rules = rules_lib.rules_for_arch(arch.arch_id, shape=shape, mesh=mesh)
+
+    params_shapes, params_axes = captured_axes(api.init)
+    params_sh = _shardings(params_axes, mesh, rules)
+    batch_struct, batch_sh = _batch_struct_and_shardings(api, shape, mesh, rules)
+
+    _, cache_axes = captured_axes(
+        lambda key: api.init_cache(shape.global_batch, shape.seq_len))
+    cache_sh = _shardings(cache_axes, mesh, rules)
+
+    def prefill(params, batch):
+        return api.prefill(params, batch)
+
+    return Plan(
+        fn=prefill,
+        args=(params_shapes, batch_struct),
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=(
+            NamedSharding(mesh, rules_lib.spec_for(("batch", None, None), mesh, rules)),
+            cache_sh),
+        meta={"arch": arch.arch_id, "shape": shape.name, "kind": "prefill",
+              "seq_len": shape.seq_len, "batch": shape.global_batch},
+    )
+
+
+def plan_decode(arch: Union[str, ArchDef], shape: ShapeLike, mesh,
+                overrides: Optional[dict] = None,
+                reduced: bool = False) -> Plan:
+    long_ctx = (shape if isinstance(shape, str)
+                else shape.name) == "long_500k"
+    arch, shape, api = _resolve(arch, shape, reduced, overrides,
+                                long_ctx=long_ctx)
+    assert shape.kind == "decode", shape.name
+    rules = rules_lib.rules_for_arch(arch.arch_id, shape=shape, mesh=mesh)
+
+    params_shapes, params_axes = captured_axes(api.init)
+    params_sh = _shardings(params_axes, mesh, rules)
+
+    cache_shapes, cache_axes = captured_axes(
+        lambda key: api.init_cache(shape.global_batch, shape.seq_len))
+    cache_sh = _shardings(cache_axes, mesh, rules)
+
+    token_struct = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    token_sh = NamedSharding(mesh, rules_lib.spec_for(("batch", None), mesh, rules))
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode(params, token, cache, pos):
+        return api.decode(params, token, cache, pos)
+
+    return Plan(
+        fn=decode,
+        args=(params_shapes, token_struct, cache_shapes, pos_struct),
+        in_shardings=(params_sh, token_sh, cache_sh, _replicated(mesh)),
+        out_shardings=(None, cache_sh),
+        meta={"arch": arch.arch_id, "shape": shape.name, "kind": "decode",
+              "seq_len": shape.seq_len, "batch": shape.global_batch,
+              "long_ctx": long_ctx},
+    )
+
+
+def build(arch_id: str, shape_name: str, mesh, *,
+          stale_s: Optional[int] = None, mode: Optional[str] = None,
+          optimizer_name: Optional[str] = None,
+          remat_override: Optional[bool] = None,
+          overrides: Optional[dict] = None,
+          num_workers: Optional[int] = None, **engine_kw) -> Plan:
+    """Kind dispatcher with the legacy ``steps.build`` call shape."""
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return make_train_engine(
+            arch_id, shape_name, mesh, mode=mode, stale_s=stale_s,
+            num_workers=num_workers, optimizer_name=optimizer_name,
+            remat_override=remat_override, overrides=overrides,
+            **engine_kw).plan()
+    if kind == "prefill":
+        return plan_prefill(arch_id, shape_name, mesh, overrides=overrides)
+    return plan_decode(arch_id, shape_name, mesh, overrides=overrides)

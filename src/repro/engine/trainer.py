@@ -111,6 +111,9 @@ class Trainer:
                     ctx.row["loss"] = float(metrics["loss"])
                 if "mean_staleness" in metrics:
                     ctx.row["mean_staleness"] = float(metrics["mean_staleness"])
+                if engine._max_bound:
+                    # live dynamic staleness bound (coherence-controller lever)
+                    ctx.row["bound"] = int(jax.device_get(ctx.state.bound))
                 for h in self.hooks:
                     h.on_log(ctx)
                 history.append(ctx.row)

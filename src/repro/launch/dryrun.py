@@ -8,9 +8,15 @@ is coherent, and extract the roofline terms (EXPERIMENTS.md §Dry-run).
 The two lines above MUST stay first — jax locks the device count on first
 init, and only the dry-run wants 512 devices (smoke tests/benches see 1).
 
+Steps are planned by the mesh-aware engine (``repro/engine/plan.py``): every
+regime — sync / stale-psum / ssp / simulate — lowers through the same
+``build_engine(mesh=...)`` sharding plan the trainer executes.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--stale 4]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+      --shape train_4k --mode ssp --stale 4
 Results append to experiments/dryrun.jsonl (idempotent per key).
 """
 import argparse
@@ -23,7 +29,8 @@ import jax
 
 from repro import configs as cfglib
 from repro.configs.base import SHAPES, count_params
-from repro.launch import hlo_analysis, steps
+from repro.engine import plan as planlib
+from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 
 OUT_DEFAULT = "experiments/dryrun.jsonl"
@@ -46,7 +53,7 @@ def active_params(arch_id: str) -> int:
 
 def run_one(arch_id: str, shape_name: str, multi_pod: bool,
             stale_s=None, remat=None, optimizer=None,
-            overrides=None, tag="") -> dict:
+            overrides=None, tag="", mode=None) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = math.prod(mesh.devices.shape)
     shape = SHAPES[shape_name]
@@ -54,16 +61,12 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
     kw = {"overrides": overrides}
     if shape.kind == "train":
         kw.update({"stale_s": stale_s, "remat_override": remat,
-                   "optimizer_name": optimizer})
-    built = steps.build(arch_id, shape_name, mesh, **kw)
+                   "optimizer_name": optimizer, "mode": mode})
+    built = planlib.build(arch_id, shape_name, mesh, **kw)
 
     t0 = time.time()
     with mesh:
-        lowered = jax.jit(
-            built.fn,
-            in_shardings=built.in_shardings,
-            out_shardings=built.out_shardings,
-        ).lower(*built.args)
+        lowered = built.jit().lower(*built.args)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()
@@ -140,6 +143,11 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--stale", type=int, default=None,
                     help="staleness bound for train steps (default: sync baseline)")
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "auto", "sync", "stale-psum", "ssp",
+                             "simulate"],
+                    help="staleness regime for train steps (default auto: "
+                         "sync iff --stale is unset/0)")
     ap.add_argument("--remat", type=lambda s: s == "true", default=None)
     ap.add_argument("--optimizer", default=None)
     ap.add_argument("--out", default=OUT_DEFAULT)
@@ -158,10 +166,17 @@ def main():
         for arch_id in archs:
             for shape_name in shapes:
                 for mp in meshes:
-                    mode = (f"stale_psum(s={args.stale})"
-                            if (args.stale and SHAPES[shape_name].kind == "train")
-                            else SHAPES[shape_name].kind if SHAPES[shape_name].kind != "train"
-                            else "sync")
+                    # Resolve the staleness bound HERE so the dedupe key
+                    # matches the key the plan meta will report (the planner
+                    # falls back to arch.stale_s_default for explicit
+                    # non-sync modes) — dryrun.jsonl stays idempotent.
+                    stale = args.stale
+                    if (stale is None
+                            and args.mode not in (None, "auto", "sync")
+                            and SHAPES[shape_name].kind == "train"):
+                        stale = cfglib.get(arch_id).stale_s_default
+                    mode = planlib.mode_label(SHAPES[shape_name].kind,
+                                              args.mode, stale)
                     key = (f"{arch_id}|{shape_name}|{'multipod' if mp else 'pod'}"
                            f"|{mode}")
                     if key in done:
@@ -169,8 +184,8 @@ def main():
                         continue
                     try:
                         rec = run_one(arch_id, shape_name, mp,
-                                      stale_s=args.stale, remat=args.remat,
-                                      optimizer=args.optimizer)
+                                      stale_s=stale, remat=args.remat,
+                                      optimizer=args.optimizer, mode=args.mode)
                     except Exception as e:  # noqa: BLE001
                         traceback.print_exc()
                         rec = {"key": key, "arch": arch_id, "shape": shape_name,

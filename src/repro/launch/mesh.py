@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.sharding.rules import data_extent  # noqa: F401  (single source)
+
 
 def _make_mesh(shape, axes):
     # axis_types landed after jax 0.4.x; Auto is the default there anyway.
@@ -28,10 +30,14 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return _make_mesh((data, model), ("data", "model"))
 
 
-def data_extent(mesh) -> int:
-    """Total data-parallel worker count (pods x data)."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    return sizes.get("data", 1) * sizes.get("pod", 1)
+def parse_host_mesh(spec: str):
+    """'DATAxMODEL' CLI spec (e.g. '4x2') -> host mesh."""
+    try:
+        data, model = (int(x) for x in spec.split("x"))
+    except ValueError:
+        raise SystemExit(
+            f"--mesh expects 'DATAxMODEL' (e.g. 4x2), got {spec!r}") from None
+    return make_host_mesh(data, model)
 
 
 def model_extent(mesh) -> int:

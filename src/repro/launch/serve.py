@@ -1,7 +1,9 @@
-"""Serving driver: batched prefill + decode for any registered architecture.
+"""Serving driver: batched prefill + decode for any registered architecture,
+through the engine's mesh-aware sharding plans (``repro/engine/plan.py``) —
+the same planning layer the dry-run lowers and the trainer executes.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --reduced \
-      --batch 8 --prompt-len 64 --gen 32
+      --batch 8 --prompt-len 64 --gen 32 [--mesh 1x1]
 """
 from __future__ import annotations
 
@@ -13,6 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
+from repro.configs.base import InputShape
+from repro.engine import plan as planlib
+from repro.launch import mesh as meshlib
 
 
 def main():
@@ -24,11 +29,14 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="1x1",
+                    help="host mesh 'DATAxMODEL' the plans shard over")
     args = ap.parse_args()
 
     arch = cfglib.get(args.arch)
     api = arch.api(reduced=args.reduced)
     cfg = api.cfg
+    mesh = meshlib.parse_host_mesh(args.mesh)
     params, _ = api.init(jax.random.PRNGKey(args.seed))
 
     rng = np.random.default_rng(args.seed)
@@ -43,10 +51,21 @@ def main():
         batch["frames"] = jnp.asarray(rng.standard_normal(
             (args.batch, cfg.num_frames, cfg.d_model)).astype(np.float32))
 
+    # Plan both steps on the mesh: prefill at the prompt length, decode
+    # against a cache sized for the full request.
+    pplan = planlib.plan_prefill(
+        arch, InputShape("serve_prefill", args.prompt_len, args.batch,
+                         "prefill"), mesh, reduced=args.reduced)
+    dplan = planlib.plan_decode(
+        arch, InputShape("serve_decode", total, args.batch, "decode"),
+        mesh, reduced=args.reduced)
+    prefill = pplan.jit()
+    decode = dplan.jit()
+
     # Prefill into a cache sized for the full request.
     t0 = time.time()
     cache_full, _ = api.init_cache(args.batch, total)
-    logits, cache = api.prefill(params, batch)
+    logits, cache = prefill(params, batch)
 
     def graft(dst, src):
         if isinstance(dst, dict):
@@ -64,7 +83,6 @@ def main():
     print(f"prefill: {args.batch}x{args.prompt_len} tokens in {prefill_s:.2f}s "
           f"({args.batch*args.prompt_len/prefill_s:.0f} tok/s)")
 
-    decode = jax.jit(api.decode)
     key = jax.random.PRNGKey(args.seed)
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     generated = [tok]

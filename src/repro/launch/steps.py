@@ -1,100 +1,33 @@
-"""Step builders: (arch x input-shape x mesh) -> a jit-able step function plus
-ShapeDtypeStruct inputs and NamedShardings — everything the dry-run, the
-trainer, and the server share. Nothing here allocates device memory; all
-state is built abstractly via eval_shape.
+"""DEPRECATED compatibility shim over ``repro.engine.plan``.
+
+Step construction used to be hand-built here on ``core/stale_sync``; the
+(arch x input-shape x mesh) sharding planning now lives in the engine
+(``repro/engine/plan.py``) so the dry-run, the trainer, the server, and the
+benchmarks all lower through one mesh-aware surface. ``Built`` is the old
+name for :class:`repro.engine.plan.Plan`; the functions below delegate and
+emit a DeprecationWarning. New code should call
+``repro.engine.plan.build(...)`` / ``make_train_engine(...)`` directly.
+
+Note the train-plan state changed shape with the fold: plans now step an
+``EngineState`` (``inner`` = the legacy Sync/StaleTrainState plus the
+dynamic staleness ``bound``) — trajectories are unchanged (bitwise-tested in
+tests/test_engine_matrix.py).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Optional
+import warnings
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as PS
-
-from repro import configs as cfglib
-from repro import treemath as tm
-from repro.configs.base import SHAPES, ArchDef, InputShape, ModelAPI
-from repro.core import stale_sync
-from repro.core.delay import UniformDelay
-from repro.launch import mesh as meshlib
-from repro.optim import optimizers as optlib
-from repro.sharding import rules as rules_lib
-
-# Architectures whose params/optimizer also shard over the data axis (ZeRO /
-# FSDP-style "embed" -> data) — required to fit the big configs on v5e HBM.
-FSDP_ARCHS = {"kimi-k2-1t-a32b", "deepseek-67b"}
+from repro.configs.base import ArchDef
+from repro.engine import plan as _plan
+from repro.engine.plan import FSDP_ARCHS, Plan as Built  # noqa: F401
 
 
-@dataclasses.dataclass
-class Built:
-    """Everything needed to lower one step."""
-    fn: Callable
-    args: tuple                 # ShapeDtypeStructs (positionally matching fn)
-    in_shardings: tuple
-    out_shardings: Any          # or None to let GSPMD choose outputs
-    meta: dict
-
-
-def _captured_axes(fn_returning_tree_and_axes):
-    captured = {}
-
-    def go(key):
-        tree, axes = fn_returning_tree_and_axes(key)
-        captured["axes"] = axes
-        return tree
-
-    shapes = jax.eval_shape(go, jax.random.PRNGKey(0))
-    return shapes, captured["axes"]
-
-
-def _shardings(axes_tree, mesh, rules):
-    return jax.tree.map(
-        lambda a: NamedSharding(mesh, rules_lib.spec_for(a, mesh, rules)),
-        axes_tree,
-        is_leaf=lambda x: isinstance(x, tuple)
-        and all(isinstance(e, (str, type(None))) for e in x),
-    )
-
-
-def _replicated(mesh):
-    return NamedSharding(mesh, PS())
-
-
-def _opt_state_shardings(opt_state_shapes, params_shardings, mesh):
-    """Moment trees mirror params; scalars replicate."""
-    flat_params = jax.tree.leaves(params_shardings)
-
-    def assign(subtree):
-        leaves = jax.tree.leaves(subtree)
-        if len(leaves) == len(flat_params):
-            treedef = jax.tree.structure(subtree)
-            return jax.tree.unflatten(treedef, flat_params)
-        return jax.tree.map(lambda _: _replicated(mesh), subtree)
-
-    return {k: assign(v) if isinstance(v, dict) or jax.tree.structure(v).num_leaves > 1
-            else _replicated(mesh)
-            for k, v in opt_state_shapes.items()}
-
-
-def _batch_struct_and_shardings(api: ModelAPI, shape: InputShape, mesh, rules):
-    spec = api.batch_spec(shape)
-    axes = api.batch_axes(shape)
-    shardings = {k: NamedSharding(mesh, rules_lib.spec_for(axes[k], mesh, rules))
-                 for k in spec}
-    return spec, shardings
-
-
-def _rules_for_arch(arch: ArchDef, shape: Optional[InputShape] = None, mesh=None):
-    rules = rules_lib.rules_for(fsdp=arch.arch_id in FSDP_ARCHS)
-    if shape is not None and mesh is not None:
-        # jit args must divide evenly: a global batch smaller than the
-        # data extent (long_500k: batch=1) is replicated instead.
-        if shape.global_batch % meshlib.data_extent(mesh):
-            rules["batch"] = None
-            rules["cache_batch"] = None
-    return rules
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.launch.steps.{name} is deprecated; use repro.engine.plan "
+        "(build / make_train_engine / plan_prefill / plan_decode)",
+        DeprecationWarning, stacklevel=3)
 
 
 def build_train_step(arch: ArchDef, shape_name: str, mesh,
@@ -102,150 +35,28 @@ def build_train_step(arch: ArchDef, shape_name: str, mesh,
                      optimizer_name: Optional[str] = None,
                      remat_override: Optional[bool] = None,
                      overrides: Optional[dict] = None) -> Built:
-    """stale_s None -> synchronous (buffer-free) baseline; stale_s >= 1 ->
-    the paper's stale-psum step with that bound. ``overrides`` patches any
-    config field (attn_impl, attn_chunk, remat, ...) for §Perf experiments."""
-    shape = SHAPES[shape_name]
-    assert shape.kind == "train", shape_name
-    overrides = dict(overrides or {})
-    if remat_override is not None:
-        overrides["remat"] = remat_override
-    api = arch.api(overrides=overrides or None)
-    rules = _rules_for_arch(arch, shape, mesh)
-
-    params_shapes, params_axes = _captured_axes(api.init)
-    params_sh = _shardings(params_axes, mesh, rules)
-
-    opt = optlib.get_optimizer(optimizer_name or arch.train_optimizer)
-    opt_shapes = jax.eval_shape(opt.init, params_shapes)
-    opt_sh = _opt_state_shardings(opt_shapes, params_sh, mesh)
-
-    batch_struct, batch_sh = _batch_struct_and_shardings(api, shape, mesh, rules)
-
-    p_workers = meshlib.data_extent(mesh)
-
-    if stale_s is None:
-        step = stale_sync.make_sync_train_step_lean(api.loss, opt)
-        state_struct = stale_sync.SyncTrainState(
-            params=params_shapes, opt_state=opt_shapes,
-            step=jax.ShapeDtypeStruct((), jnp.int32))
-        state_sh = stale_sync.SyncTrainState(
-            params=params_sh, opt_state=opt_sh, step=_replicated(mesh))
-        mode = "sync"
-    else:
-        # FSDP archs shard params over 'data' already, so the per-worker
-        # buffer axis cannot also use it; they get the aggregate-buffer form
-        # (the Theorem-1 single-tau update — also P-fold less buffer memory).
-        per_worker = arch.arch_id not in FSDP_ARCHS
-        cfg = stale_sync.StaleSyncConfig(
-            num_workers=p_workers, s=stale_s,
-            buffer_dtype=getattr(api.cfg, "param_dtype", jnp.float32),
-            per_worker_delays=per_worker)
-        step = stale_sync.make_stale_train_step(api.loss, opt, cfg)
-        lead = (cfg.slots, p_workers) if per_worker else (cfg.slots,)
-        gbuf_shapes = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(lead + x.shape, cfg.buffer_dtype),
-            params_shapes)
-        worker_axis = ("pod", "data") if "pod" in mesh.axis_names else "data"
-
-        def buf_shard(a):
-            base = rules_lib.spec_for(a, mesh, rules)
-            if per_worker:
-                return NamedSharding(mesh, PS(None, worker_axis, *base))
-            return NamedSharding(mesh, PS(None, *base))
-
-        gbuf_sh = jax.tree.map(
-            buf_shard, params_axes,
-            is_leaf=lambda x: isinstance(x, tuple)
-            and all(isinstance(e, (str, type(None))) for e in x))
-        state_struct = stale_sync.StaleTrainState(
-            params=params_shapes, opt_state=opt_shapes, gbuf=gbuf_shapes,
-            step=jax.ShapeDtypeStruct((), jnp.int32),
-            key=jax.ShapeDtypeStruct((2,), jnp.uint32))
-        state_sh = stale_sync.StaleTrainState(
-            params=params_sh, opt_state=opt_sh, gbuf=gbuf_sh,
-            step=_replicated(mesh), key=_replicated(mesh))
-        mode = f"stale_psum(s={stale_s})"
-
-    return Built(
-        fn=step,
-        args=(state_struct, batch_struct),
-        in_shardings=(state_sh, batch_sh),
-        out_shardings=(state_sh, None),
-        meta={"arch": arch.arch_id, "shape": shape_name, "kind": "train",
-              "mode": mode, "optimizer": optimizer_name or arch.train_optimizer,
-              "workers": p_workers},
-    )
+    _warn("build_train_step")
+    # Legacy semantics exactly: stale_s None -> sync; any int (including 0)
+    # -> the stale-psum step with that bound.
+    return _plan.make_train_engine(
+        arch, shape_name, mesh, stale_s=stale_s,
+        mode=None if stale_s is None else "stale-psum",
+        optimizer_name=optimizer_name, remat_override=remat_override,
+        overrides=overrides).plan()
 
 
 def build_prefill_step(arch: ArchDef, shape_name: str, mesh,
                        overrides: Optional[dict] = None) -> Built:
-    shape = SHAPES[shape_name]
-    assert shape.kind == "prefill", shape_name
-    api = arch.api(overrides=overrides)
-    rules = _rules_for_arch(arch, shape, mesh)
-
-    params_shapes, params_axes = _captured_axes(api.init)
-    params_sh = _shardings(params_axes, mesh, rules)
-    batch_struct, batch_sh = _batch_struct_and_shardings(api, shape, mesh, rules)
-
-    _, cache_axes = _captured_axes(
-        lambda key: api.init_cache(shape.global_batch, shape.seq_len))
-    cache_sh = _shardings(cache_axes, mesh, rules)
-
-    def prefill(params, batch):
-        return api.prefill(params, batch)
-
-    return Built(
-        fn=prefill,
-        args=(params_shapes, batch_struct),
-        in_shardings=(params_sh, batch_sh),
-        out_shardings=(
-            NamedSharding(mesh, rules_lib.spec_for(("batch", None, None), mesh, rules)),
-            cache_sh),
-        meta={"arch": arch.arch_id, "shape": shape_name, "kind": "prefill",
-              "seq_len": shape.seq_len, "batch": shape.global_batch},
-    )
+    _warn("build_prefill_step")
+    return _plan.plan_prefill(arch, shape_name, mesh, overrides=overrides)
 
 
 def build_decode_step(arch: ArchDef, shape_name: str, mesh,
                       overrides: Optional[dict] = None) -> Built:
-    shape = SHAPES[shape_name]
-    assert shape.kind == "decode", shape_name
-    long_ctx = shape_name == "long_500k"
-    api = arch.api(long_ctx=long_ctx, overrides=overrides)
-    rules = _rules_for_arch(arch, shape, mesh)
-
-    params_shapes, params_axes = _captured_axes(api.init)
-    params_sh = _shardings(params_axes, mesh, rules)
-
-    cache_shapes, cache_axes = _captured_axes(
-        lambda key: api.init_cache(shape.global_batch, shape.seq_len))
-    cache_sh = _shardings(cache_axes, mesh, rules)
-
-    token_struct = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
-    token_sh = NamedSharding(mesh, rules_lib.spec_for(("batch", None), mesh, rules))
-    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
-
-    def decode(params, token, cache, pos):
-        return api.decode(params, token, cache, pos)
-
-    return Built(
-        fn=decode,
-        args=(params_shapes, token_struct, cache_shapes, pos_struct),
-        in_shardings=(params_sh, token_sh, cache_sh, _replicated(mesh)),
-        out_shardings=(None, cache_sh),
-        meta={"arch": arch.arch_id, "shape": shape_name, "kind": "decode",
-              "seq_len": shape.seq_len, "batch": shape.global_batch,
-              "long_ctx": long_ctx},
-    )
+    _warn("build_decode_step")
+    return _plan.plan_decode(arch, shape_name, mesh, overrides=overrides)
 
 
 def build(arch_id: str, shape_name: str, mesh, **kw) -> Built:
-    arch = cfglib.get(arch_id)
-    kind = SHAPES[shape_name].kind
-    if kind == "train":
-        return build_train_step(arch, shape_name, mesh, **kw)
-    if kind == "prefill":
-        return build_prefill_step(arch, shape_name, mesh, **kw)
-    return build_decode_step(arch, shape_name, mesh, **kw)
+    _warn("build")
+    return _plan.build(arch_id, shape_name, mesh, **kw)

@@ -11,7 +11,9 @@ configs — everything below is mesh-agnostic.
 
 ``--mode`` selects the staleness regime explicitly (sync / stale-psum /
 ssp / simulate); the default ``auto`` picks sync when ``--stale 0`` and
-stale-psum otherwise, matching the legacy driver.
+stale-psum otherwise, matching the legacy driver. ``--mesh DATAxMODEL``
+builds a host mesh and the engine's sharding plan places state and batches
+on it (the same plan the dry-run lowers on the production mesh).
 """
 from __future__ import annotations
 
@@ -25,10 +27,12 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro import treemath as tm
+from repro.configs.base import InputShape
 from repro.core import coherence as coh
 from repro.data.synthetic import token_lm_stream
 from repro.engine import (CheckpointHook, CoherenceHook, EngineConfig,
                           StdoutSink, Trainer, build_engine)
+from repro.launch import mesh as meshlib
 from repro.optim import optimizers as optlib
 
 
@@ -77,6 +81,9 @@ def main():
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--coherence", action="store_true",
                     help="enable the gradient-coherence monitor + controller")
+    ap.add_argument("--mesh", default="1x1",
+                    help="host mesh 'DATAxMODEL' (e.g. 4x2); the engine's "
+                         "sharding plan places state/batches on it")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -95,11 +102,13 @@ def main():
     opt_kwargs = {"lr": args.lr} if args.lr else {}
     opt = optlib.get_optimizer(args.optimizer or arch.train_optimizer,
                                **opt_kwargs)
-    if mode == "simulate" and args.batch % args.workers:
-        raise SystemExit("simulate mode needs --batch divisible by --workers")
+    if mode != "sync" and args.batch % args.workers:
+        raise SystemExit(f"mode={mode} needs --batch divisible by --workers")
+    mesh = meshlib.parse_host_mesh(args.mesh)
+    shape = InputShape(f"train_cli_{args.seq}", args.seq, args.batch, "train")
     ecfg = EngineConfig(mode=mode, num_workers=args.workers, s=args.stale,
                         ssp_steps=max(args.steps, 1), ssp_seed=args.seed)
-    engine = build_engine(api, opt, ecfg)
+    engine = build_engine(api, opt, ecfg, mesh=mesh, arch=arch, shape=shape)
     state = engine.init(jax.random.PRNGKey(args.seed))
     n_params = tm.tree_size(engine.params(state))
     print(f"params: {n_params/1e6:.1f}M")

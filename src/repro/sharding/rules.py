@@ -14,6 +14,10 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as PS
 
+# Architectures whose params/optimizer also shard over the data axis (ZeRO /
+# FSDP-style "embed" -> data) — required to fit the big configs on v5e HBM.
+FSDP_ARCHS = {"kimi-k2-1t-a32b", "deepseek-67b"}
+
 # logical axis -> mesh axis (None = replicated). "batch" spans pod+data.
 DEFAULT_RULES = {
     "batch": ("pod", "data"),
@@ -46,6 +50,45 @@ def rules_for(fsdp: bool = False, extra: Optional[dict] = None) -> dict:
     if extra:
         rules.update(extra)
     return rules
+
+
+def data_extent(mesh: Mesh) -> int:
+    """Total data-parallel worker count (pods x data)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)
+
+
+def worker_axes(mesh: Mesh):
+    """Mesh axes a leading worker dimension shards over: ("pod","data") kept
+    as available, collapsed to a single name or None like spec_for does."""
+    kept = tuple(a for a in ("pod", "data") if a in set(mesh.axis_names))
+    return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+
+def rules_for_arch(arch_id: Optional[str], shape=None, mesh: Optional[Mesh] = None,
+                   extra: Optional[dict] = None) -> dict:
+    """The rule set the sharding planner uses for one (arch, shape, mesh):
+    FSDP placement for the ZeRO-class archs, plus the even-division fallback —
+    jit args must divide evenly, so a global batch smaller than the data
+    extent (long_500k: batch=1) is replicated instead."""
+    rules = rules_for(fsdp=arch_id in FSDP_ARCHS, extra=extra)
+    if shape is not None and mesh is not None:
+        if shape.global_batch % data_extent(mesh):
+            rules["batch"] = None
+            rules["cache_batch"] = None
+    return rules
+
+
+def strip_data(rules: dict) -> dict:
+    """Rules with pod/data targets removed (model-axis sharding only) — for
+    state whose leading worker dimension already occupies the data axis (a
+    PartitionSpec may not use a mesh axis twice)."""
+    def clean(v):
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a not in ("pod", "data"))
+            return kept if len(kept) > 1 else (kept[0] if kept else None)
+        return None if v in ("pod", "data") else v
+    return {k: clean(v) for k, v in rules.items()}
 
 
 def _mesh_axes(mesh: Mesh) -> set:

@@ -1,0 +1,154 @@
+"""Engine smoke matrix: modes x archs x meshes through the sharding planner.
+
+Every combination of the four staleness regimes, three model families, and
+{1-device, 2-device} CPU meshes must produce finite losses and replay
+deterministically from a fixed seed through the engine-planned sharded step
+(``repro/engine/plan.py``). One arch is additionally checked BITWISE against
+the legacy ``launch/steps.py`` construction (hand-built on
+``core/stale_sync``, as the pre-fold code did) — the planner is a surface
+refactor, not a numerics change.
+
+The 2-device leg runs in a subprocess: jax locks the host device count at
+first init and the main pytest process must keep 1 device for the smoke
+tests (same pattern as test_distributed_integration.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.configs.base import InputShape
+from repro.core import stale_sync
+from repro.engine import plan as planlib
+from repro.launch import mesh as meshlib
+from repro.optim import optimizers as optlib
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MODES = ("sync", "stale-psum", "ssp", "simulate")
+ARCHS = ("deepseek-7b", "mamba2-1.3b", "whisper-base")  # 3 model families
+SHAPE = InputShape("matrix_train", seq_len=16, global_batch=4, kind="train")
+
+
+def make_batch(spec, key):
+    """Deterministic batch matching a plan's batch struct (tokens stay in
+    [0, 16) — valid for every arch's vocabulary)."""
+    out = {}
+    for i, name in enumerate(sorted(spec)):
+        s = spec[name]
+        k = jax.random.fold_in(key, i)
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, s.shape, 0, 16)
+        else:
+            out[name] = jax.random.normal(k, s.shape, s.dtype)
+    return out
+
+
+def make_engine(arch_id, mode, mesh):
+    return planlib.make_train_engine(
+        arch_id, SHAPE, mesh, mode=mode, stale_s=2, num_workers=2,
+        reduced=True, ssp_steps=8)
+
+
+def run_combo(engine, steps=2, seed=0):
+    state = engine.init(jax.random.PRNGKey(seed))
+    spec = engine.plan().args[1]
+    losses = []
+    for t in range(steps):
+        batch = make_batch(spec, jax.random.fold_in(
+            jax.random.PRNGKey(seed + 1), t))
+        state, metrics = engine.step(state, batch)
+        losses.append(float(metrics["loss"]))
+    return state, losses
+
+
+def check_legacy_equivalence(mesh, arch_id="deepseek-7b", steps=5):
+    """Engine-planned step == the pre-fold launch/steps.py path, bitwise."""
+    P, s = 2, 3
+    arch = cfglib.get(arch_id)
+    api = arch.api(reduced=True)
+    opt = optlib.get_optimizer(arch.train_optimizer)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key)[0]
+
+    scfg = stale_sync.StaleSyncConfig(
+        num_workers=P, s=s,
+        buffer_dtype=getattr(api.cfg, "param_dtype", jnp.float32))
+    legacy_step = jax.jit(stale_sync.make_stale_train_step(api.loss, opt, scfg))
+    legacy = stale_sync.init_state(params, opt, scfg, key)
+
+    engine = planlib.make_train_engine(
+        arch, SHAPE, mesh, mode="stale-psum", stale_s=s, num_workers=P,
+        reduced=True)
+    state = engine.init(key)
+    spec = engine.plan().args[1]
+
+    for t in range(steps):
+        batch = make_batch(spec, jax.random.fold_in(jax.random.PRNGKey(1), t))
+        legacy, lm = legacy_step(legacy, batch)
+        state, em = engine.step(state, batch)
+        np.testing.assert_array_equal(np.asarray(lm["mean_staleness"]),
+                                      np.asarray(em["mean_staleness"]))
+    for a, b in zip(jax.tree.leaves(legacy.params),
+                    jax.tree.leaves(state.inner.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(legacy.gbuf),
+                    jax.tree.leaves(state.inner.gbuf)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+@pytest.mark.parametrize("mode", MODES)
+def test_matrix_single_device(mode, arch_id):
+    """Finite losses + bitwise-deterministic replay on the 1-device mesh."""
+    mesh = meshlib.make_host_mesh(1, 1)
+    engine = make_engine(arch_id, mode, mesh)
+    state1, losses1 = run_combo(engine)
+    assert all(np.isfinite(l) for l in losses1), (mode, arch_id, losses1)
+    state2, losses2 = run_combo(engine)
+    assert losses1 == losses2, (mode, arch_id)
+    for a, b in zip(jax.tree.leaves(engine.params(state1)),
+                    jax.tree.leaves(engine.params(state2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_plan_matches_legacy_steps_path():
+    check_legacy_equivalence(meshlib.make_host_mesh(1, 1))
+
+
+def test_matrix_two_device_sharded():
+    """The full matrix on a (data=2) mesh, plus the sharded legacy
+    bitwise-equivalence check, in a 2-device subprocess."""
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import sys
+        sys.path.insert(0, {os.path.join(REPO, 'tests')!r})
+        import numpy as np
+        import test_engine_matrix as M
+        from repro.launch import mesh as meshlib
+
+        mesh = meshlib.make_host_mesh(2, 1)
+        for arch_id in M.ARCHS:
+            for mode in M.MODES:
+                engine = M.make_engine(arch_id, mode, mesh)
+                state, losses = M.run_combo(engine)
+                assert all(np.isfinite(l) for l in losses), \\
+                    (arch_id, mode, losses)
+                _, replay = M.run_combo(engine)
+                assert losses == replay, (arch_id, mode)
+        M.check_legacy_equivalence(mesh)
+        print("MATRIX2_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert "MATRIX2_OK" in r.stdout, r.stdout + r.stderr
