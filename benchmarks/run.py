@@ -16,8 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig1|fig2|fig3|fig4|fig5|theorem1|kernels|roofline"
-                         "|lowering")
+                    help="comma-separated subset: fig1|fig2|fig3|fig4|fig5"
+                         "|theorem1|kernels|roofline|lowering|engine_step")
     args = ap.parse_args()
     quick = not args.full
     os.makedirs("experiments", exist_ok=True)
@@ -55,9 +55,12 @@ def main() -> None:
         "roofline": roofline,
         "lowering": lambda: __import__(
             "benchmarks.lowering_bench", fromlist=["main"]).main(quick=quick),
+        "engine_step": lambda: __import__(
+            "benchmarks.engine_step_bench",
+            fromlist=["main"]).main(quick=quick),
     }
 
-    names = [args.only] if args.only else list(suite)
+    names = args.only.split(",") if args.only else list(suite)
     for name in names:
         if name not in suite:
             raise SystemExit(f"unknown benchmark {name!r}; have {list(suite)}")

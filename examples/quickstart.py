@@ -25,7 +25,8 @@ def batches_to_target(staleness: int, workers: int = 8, target: float = 0.85):
 
     opt = paper_default("sgd")                      # Table 1: eta = 0.01
     engine = build_engine(mlp.loss_fn, opt, EngineConfig(
-        mode="simulate", num_workers=workers, s=staleness))
+        mode="simulate", num_workers=workers, s=staleness,
+        kernels="auto"))                            # fused hot spots where routed
     state = engine.init(jax.random.PRNGKey(1), params=params)
 
     batches = ShardedBatches([data.x_train, data.y_train], workers, 32)
@@ -35,11 +36,16 @@ def batches_to_target(staleness: int, workers: int = 8, target: float = 0.85):
         iter(batches), steps=4000, state=state,
         eval_fn=lambda p: mlp.accuracy(p, xt, yt),
         eval_every=25, target=target)
-    return result.batches_to_target
+    return result.batches_to_target, engine
 
 
 if __name__ == "__main__":
-    sync = batches_to_target(0)
-    stale = batches_to_target(16)
+    sync, _ = batches_to_target(0)
+    stale, engine = batches_to_target(16)
     print(f"batches to 85% accuracy:  s=0 -> {sync},  s=16 -> {stale}")
     print(f"staleness slowdown: {stale / sync:.2f}x  (paper Fig. 1: 1-6x)")
+    rep = engine.dispatch_report()
+    print(f"kernel dispatch: config={rep['config']} delivery={rep['delivery']}"
+          " (simulate-mode delivery is per-worker tree math by design)")
+    for op, backend in rep["decisions"].items():
+        print(f"  {op:<16} -> {backend}")

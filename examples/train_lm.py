@@ -28,6 +28,9 @@ def main():
         "--batch", "16", "--seq", "128", "--workers", "4",
         "--optimizer", "adam", "--lr", "3e-4",
         "--coherence",
+        # kernel-backed hot path: packed ring delivery + fused Adam/coherence
+        # where dispatch routes them; the driver prints the dispatch report.
+        "--kernels", "auto",
         "--out", "experiments/train_lm.json",
     ]
     if not args.full:

@@ -45,18 +45,33 @@ def init_coherence(dim: int, window: int) -> CoherenceState:
     )
 
 
-def observe(state: CoherenceState, grad_vec: jax.Array) -> Tuple[CoherenceState, dict]:
+def observe(state: CoherenceState, grad_vec: jax.Array,
+            kernels: bool = False) -> Tuple[CoherenceState, dict]:
     """Push the current probe gradient; return mu_k and the cosine profile.
 
     ``cosines[m]`` is cos(g_k, g_{k-m}) for lag m = 1..window (NaN-free: lags
     beyond ``count`` report 1.0 and are masked out of mu via +inf).
+
+    ``kernels=True`` computes the history-dot reduction in ONE fused pass
+    over the [window, dim] ring via ``repro.kernels.dispatch.coherence_dots``
+    (the Definition-1 hot spot); the default keeps the legacy three-op jnp
+    reduction bitwise.
     """
     g = grad_vec.astype(jnp.float32)
-    window, _ = state.history.shape
+    window, dim_h = state.history.shape
+    if g.shape[-1] != dim_h:
+        # History rings may be block-padded (CoherenceHook(kernels=True))
+        # so the fused reduction meets the kernel's divisibility contract;
+        # the zero tail changes no dot, norm, or cosine.
+        g = jnp.pad(g, (0, dim_h - g.shape[-1]))
 
-    dots = state.history @ g                                   # [window]
-    hist_sq = jnp.sum(state.history * state.history, axis=-1)  # [window]
-    g_sq = jnp.sum(g * g)
+    if kernels:
+        from repro.kernels import dispatch
+        dots, hist_sq, g_sq = dispatch.coherence_dots(state.history, g)
+    else:
+        dots = state.history @ g                                   # [window]
+        hist_sq = jnp.sum(state.history * state.history, axis=-1)  # [window]
+        g_sq = jnp.sum(g * g)
 
     # slot -> lag: slot written j steps ago has lag j+1 relative to g_k.
     slots = jnp.arange(window)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro import treemath as tm
 from repro.core.delay import DelayModel, UniformDelay
+from repro.kernels import dispatch
 from repro.optim.optimizers import Optimizer
 
 Pytree = Any
@@ -54,6 +55,12 @@ class StaleSyncConfig:
     # indexed by step mod T. This is how repro.engine runs SSP — the clock
     # discipline's effective read staleness becomes the delay schedule.
     delay_table: Optional[Any] = None
+    # Kernel-backed hot path: store the gradient ring buffer as ONE packed
+    # [slots(, P), D] array and run the delayed-update delivery through
+    # repro.kernels.dispatch.stale_accum over contiguous flat views, instead
+    # of per-leaf tree math. False keeps the legacy per-leaf buffer
+    # (bitwise-identical trajectories); True is fp32-tolerance equivalent.
+    kernels: bool = False
 
     def __post_init__(self):
         if self.delay is None:
@@ -80,8 +87,16 @@ def init_state(params: Pytree, optimizer: Optimizer, cfg: StaleSyncConfig,
                key: jax.Array) -> StaleTrainState:
     lead = ((cfg.slots, cfg.num_workers) if cfg.per_worker_delays
             else (cfg.slots,))
-    gbuf = jax.tree.map(
-        lambda x: jnp.zeros(lead + x.shape, cfg.buffer_dtype), params)
+    if cfg.kernels:
+        # One contiguous ring: [slots(, P), D] — the packed view the fused
+        # delivery kernel consumes without per-step re-packing. D is padded
+        # to the kernel block width so the fast path always applies.
+        width = tm.padded_size(tm.pack_spec(params).total,
+                               dispatch.PACK_ALIGN)
+        gbuf = jnp.zeros(lead + (width,), cfg.buffer_dtype)
+    else:
+        gbuf = jax.tree.map(
+            lambda x: jnp.zeros(lead + x.shape, cfg.buffer_dtype), params)
     return StaleTrainState(
         params=params,
         opt_state=optimizer.init(params),
@@ -128,15 +143,37 @@ def make_stale_train_step(
 
         slots = cfg.slots
         write = jnp.mod(state.step, slots)
-        to_buffer = grads if cfg.per_worker_delays else gmean
-        gbuf = jax.tree.map(
-            lambda buf, g: jax.lax.dynamic_update_index_in_dim(
-                buf, g.astype(buf.dtype), write, 0),
-            state.gbuf, to_buffer)
+        if cfg.kernels:
+            # Packed hot path: gradients concatenate once into a contiguous
+            # [P, D] (or [D]) view, the ring holds packed rows, and delivery
+            # is ONE fused weighted reduction (dispatch.stale_accum) over the
+            # selected rows instead of per-leaf gather + mean.
+            spec = tm.pack_spec(state.params)
+            pad = dispatch.PACK_ALIGN
+            gvec = (tm.tree_pack(grads, lead_ndim=1, pad_to=pad)
+                    if cfg.per_worker_delays
+                    else tm.tree_pack(gmean, pad_to=pad))
+            gbuf = jax.lax.dynamic_update_index_in_dim(
+                state.gbuf, gvec.astype(state.gbuf.dtype), write, 0)
+
+            def kernel_agg(sel, weights):
+                aggv = dispatch.stale_accum(
+                    jnp.zeros((sel.shape[-1],), jnp.float32), sel, weights)
+                return tm.tree_unpack(aggv, spec, dtype=jnp.float32)
+        else:
+            to_buffer = grads if cfg.per_worker_delays else gmean
+            gbuf = jax.tree.map(
+                lambda buf, g: jax.lax.dynamic_update_index_in_dim(
+                    buf, g.astype(buf.dtype), write, 0),
+                state.gbuf, to_buffer)
 
         if cfg.s == 0:
-            agg = (jax.tree.map(lambda g: g.mean(axis=0), grads)
-                   if cfg.per_worker_delays else gmean)
+            if cfg.kernels and cfg.per_worker_delays:
+                agg = kernel_agg(gvec, jnp.full((p,), 1.0 / p, jnp.float32))
+            elif cfg.per_worker_delays:
+                agg = jax.tree.map(lambda g: g.mean(axis=0), grads)
+            else:
+                agg = gmean
             staleness = jnp.zeros((p,), jnp.int32)
         elif cfg.per_worker_delays:
             if cfg.delay_table is not None:
@@ -150,13 +187,20 @@ def make_stale_train_step(
             d = jnp.minimum(d, state.step)          # no history before step 0
             read = jnp.mod(state.step - d, slots)   # [P]
 
-            def select(buf):
-                # buf [slots, P, ...]; per-worker delayed slot.
+            if cfg.kernels:
+                # [P, D]: each worker's delayed packed row, fused-averaged.
                 sel = jnp.take_along_axis(
-                    buf, read.reshape((1, p) + (1,) * (buf.ndim - 2)), axis=0)
-                return sel[0].astype(jnp.float32).mean(axis=0)
+                    gbuf, read.reshape((1, p, 1)), axis=0)[0]
+                agg = kernel_agg(sel, jnp.full((p,), 1.0 / p, jnp.float32))
+            else:
+                def select(buf):
+                    # buf [slots, P, ...]; per-worker delayed slot.
+                    sel = jnp.take_along_axis(
+                        buf, read.reshape((1, p) + (1,) * (buf.ndim - 2)),
+                        axis=0)
+                    return sel[0].astype(jnp.float32).mean(axis=0)
 
-            agg = jax.tree.map(select, gbuf)
+                agg = jax.tree.map(select, gbuf)
             staleness = d
         else:
             # Theorem-1 form: one delayed AGGREGATE gradient per step.
@@ -165,10 +209,15 @@ def make_stale_train_step(
                 d = jnp.minimum(d, jnp.asarray(bound, jnp.int32))
             d = jnp.minimum(d, state.step)
             read = jnp.mod(state.step - d, slots)
-            agg = jax.tree.map(
-                lambda buf: jax.lax.dynamic_index_in_dim(
-                    buf, read, 0, keepdims=False).astype(jnp.float32),
-                gbuf)
+            if cfg.kernels:
+                sel = jax.lax.dynamic_index_in_dim(gbuf, read, 0,
+                                                   keepdims=True)  # [1, D]
+                agg = kernel_agg(sel, jnp.ones((1,), jnp.float32))
+            else:
+                agg = jax.tree.map(
+                    lambda buf: jax.lax.dynamic_index_in_dim(
+                        buf, read, 0, keepdims=False).astype(jnp.float32),
+                    gbuf)
             staleness = jnp.broadcast_to(d, (p,))
 
         delta, opt_state = optimizer.update(agg, state.opt_state, state.params)

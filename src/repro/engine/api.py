@@ -60,6 +60,17 @@ class EngineConfig:
     num_workers: int = 1
     s: int = 0
     delay: Optional[DelayModel] = None   # overrides UniformDelay(s)
+    # Kernel-backed hot path (repro.kernels.dispatch): "off" keeps the
+    # legacy per-leaf tree math (bitwise legacy trajectories); "auto" routes
+    # the ring-buffer delivery through the packed fused kernels where the
+    # sharding placement allows it (falls back to tree math otherwise, e.g.
+    # FSDP archs whose buffer must shard param dims over 'data'); "on"
+    # requires the packed path and raises where it is unsupported.
+    kernels: str = "off"
+    # Donate the EngineState to the PLANNED jitted step (ring buffer, opt
+    # state, params reuse their buffers instead of a full-state copy each
+    # step). Escape hatch for callers that re-step a held state.
+    donate: bool = True
     # stale-psum extras (see StaleSyncConfig):
     per_worker_delays: bool = True
     buffer_dtype: Any = jnp.float32
@@ -80,6 +91,9 @@ class EngineConfig:
             raise ValueError("num_workers must be >= 1")
         if self.s < 0:
             raise ValueError(f"staleness bound s must be >= 0, got {self.s}")
+        if self.kernels not in ("off", "auto", "on"):
+            raise ValueError(f"kernels must be 'off'|'auto'|'on', "
+                             f"got {self.kernels!r}")
         if self.delay is not None and self.mode in ("ssp", "sync"):
             raise ValueError(
                 f"delay= is not used by mode={self.mode!r} (ssp derives "
@@ -120,11 +134,15 @@ class Engine:
 
     def _attach_plan(self, plan) -> None:
         """Adopt a sharding plan: the jitted step gains explicit in/out
-        NamedShardings so state and batches are placed on the mesh."""
+        NamedShardings so state and batches are placed on the mesh, and —
+        unless ``cfg.donate=False`` — donates the EngineState argument so
+        the ring buffer / optimizer state / params reuse their buffers
+        instead of being copied whole every step."""
         self._plan = plan
         self._jit_step = jax.jit(self._wrap,
                                  in_shardings=plan.in_shardings,
-                                 out_shardings=plan.out_shardings)
+                                 out_shardings=plan.out_shardings,
+                                 donate_argnums=plan.donate_argnums)
 
     def _wrap(self, state: EngineState, batch):
         inner, metrics = self._step_inner(state.inner, batch, state.bound)
@@ -183,6 +201,19 @@ class Engine:
         """Worker batches consumed per engine step (the paper's accounting)."""
         return self.cfg.num_workers
 
+    # -- kernel dispatch ----------------------------------------------------
+    def dispatch_report(self) -> dict:
+        """Which hot spots run fused vs ref: the engine-level routing verdict
+        (``delivery``, engine-specific) plus the per-op backend decisions the
+        dispatch layer recorded at trace time. Decisions are a PROCESS-WIDE
+        trace log (one entry per op, last trace wins): a second engine whose
+        step hits the jit cache records nothing new, and entries traced by
+        other engines in the same process remain visible."""
+        from repro.kernels import dispatch
+        info = dict(self.meta.get("kernels", {"config": self.cfg.kernels}))
+        info["decisions"] = dispatch.report()
+        return info
+
     # -- dynamic staleness control ----------------------------------------
     def with_staleness(self, state: EngineState, s) -> EngineState:
         """Clamp the engine to an effective staleness bound ``s`` (0 =
@@ -195,6 +226,29 @@ class Engine:
             b = jnp.asarray(s, jnp.int32)
         return dataclasses.replace(
             state, bound=jnp.minimum(b, jnp.int32(self._max_bound)))
+
+
+def kernel_placement_ok(kernels: str, arch=None, mesh=None) -> Tuple[bool, str]:
+    """Can packed flat [D] views keep this (arch, mesh) placement?
+
+    Shared verdict for every packed hot spot (ring delivery AND the fused
+    optimizer): FSDP archs shard param dims over 'data' and a mesh with a
+    model axis > 1 shards them over 'model' — a packed view mixes leaves,
+    so either placement would be silently replaced by per-step all-gathers.
+    Returns ``(ok, why_not)``; ``kernels="on"`` overrides the model-axis
+    veto (an explicit, profiled choice) but never the FSDP one.
+    """
+    if kernels == "off":
+        return False, "config off"
+    from repro.sharding import rules as rules_lib
+    arch_id = getattr(arch, "arch_id", arch)
+    if arch_id in rules_lib.FSDP_ARCHS:
+        return False, "FSDP placement"
+    if kernels == "auto" and mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if sizes.get("model", 1) > 1:
+            return False, f"model axis extent {sizes['model']}"
+    return True, ""
 
 
 def _mean_over_workers(metrics: dict) -> dict:
@@ -236,6 +290,29 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
 
     mode = cfg.mode
     meta = {"mode": mode, "workers": cfg.num_workers, "s": cfg.s}
+
+    # Kernel routing verdict for the ring-buffer delivery (the stale_accum
+    # hot spot). FSDP archs shard the buffer's param dims over 'data'; a
+    # packed [slots(, P), D] buffer cannot keep that placement, so "auto"
+    # falls back to tree math there and "on" refuses.
+    kernel_delivery, why = False, ""
+    if cfg.kernels != "off" and mode in ("stale-psum", "ssp"):
+        kernel_delivery, why = kernel_placement_ok(cfg.kernels, arch, mesh)
+        if not kernel_delivery and cfg.kernels == "on":
+            arch_id = getattr(arch, "arch_id", arch)
+            raise ValueError(
+                f"kernels='on' is unsupported for FSDP arch {arch_id!r}: "
+                "the packed ring buffer cannot keep the 'embed'->data "
+                "placement; use kernels='auto' (falls back to tree math)")
+    if mode in ("stale-psum", "ssp"):
+        delivery = "packed" if kernel_delivery else "tree"
+    elif mode == "simulate":
+        delivery = "tree"   # simulate's [P, B, ...] dispatch is not routed
+    else:
+        delivery = "none"   # sync is buffer-free
+    meta["kernels"] = {"config": cfg.kernels, "delivery": delivery}
+    if why:
+        meta["kernels"]["fallback"] = why
 
     def _finish(engine: Engine) -> Engine:
         if mesh is not None and shape is not None:
@@ -305,14 +382,16 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
         # schedule delays reach cfg.s, so the ring needs s+1 slots.
         scfg = stale_sync.StaleSyncConfig(
             num_workers=cfg.num_workers, s=cfg.s + 1,
-            buffer_dtype=cfg.buffer_dtype, delay_table=table)
+            buffer_dtype=cfg.buffer_dtype, delay_table=table,
+            kernels=kernel_delivery)
         meta["ssp_schedule"] = table
         max_bound = cfg.s
     else:
         scfg = stale_sync.StaleSyncConfig(
             num_workers=cfg.num_workers, s=cfg.s, delay=cfg.delay,
             buffer_dtype=cfg.buffer_dtype,
-            per_worker_delays=cfg.per_worker_delays)
+            per_worker_delays=cfg.per_worker_delays,
+            kernels=kernel_delivery)
         if scfg.delay.bound > scfg.slots - 1:
             # A delay the ring can't hold would silently wrap onto a much
             # fresher slot while metrics report the large staleness.

@@ -7,6 +7,7 @@ metric sinks (stdout JSON lines, JSONL files).
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import sys
@@ -34,11 +35,20 @@ class CoherenceHook(Hook):
     """
 
     def __init__(self, loss_fn, probe_batch, dim: int, window: int = 8,
-                 every: int = 10, controller=None):
+                 every: int = 10, controller=None, kernels: bool = False):
+        if kernels:
+            # Block-pad the history ring so the fused reduction meets the
+            # kernel's divisibility contract (observe pads the probe
+            # gradient to match; the zero tail is numerically inert).
+            from repro.kernels import dispatch
+            dim = tm.padded_size(dim, dispatch.PACK_ALIGN)
         self.monitor = coh.init_coherence(dim, window)
         self._grad = jax.jit(lambda p: tm.tree_flatten_to_vector(
             jax.grad(loss_fn)(p, probe_batch)))
-        self._observe = jax.jit(coh.observe)
+        # kernels=True: the Definition-1 reduction runs as ONE fused pass
+        # over the history ring (repro.kernels.dispatch.coherence_dots).
+        self._observe = jax.jit(
+            functools.partial(coh.observe, kernels=kernels))
         self.controller = controller
         self.ctl = controller.init() if controller is not None else None
         self.every = max(every, 1)

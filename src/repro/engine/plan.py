@@ -57,10 +57,16 @@ class Plan:
     in_shardings: tuple
     out_shardings: Any          # or None to let GSPMD choose outputs
     meta: dict
+    # Positional args donated to the jitted step. Train plans donate the
+    # EngineState (arg 0) unless EngineConfig(donate=False): XLA aliases the
+    # ring buffer / opt state / params in-place instead of materialising a
+    # full-state copy every step.
+    donate_argnums: tuple = ()
 
     def jit(self):
         return jax.jit(self.fn, in_shardings=self.in_shardings,
-                       out_shardings=self.out_shardings)
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
 
     def lower(self, mesh=None):
         with (mesh if mesh is not None else contextlib.nullcontext()):
@@ -185,17 +191,26 @@ def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
             params=params_sh, opt_state=opt_sh, step=_replicated(mesh))
     elif cfg.mode in ("stale-psum", "ssp"):
         per_worker = cfg.mode == "ssp" or cfg.per_worker_delays
-        # A per-worker buffer spends the data axis on its worker dim, so its
-        # param dims must not reuse it (FSDP rules would).
-        buf_rules = rules_lib.strip_data(rules) if (per_worker and fsdp) else rules
+        if engine.meta.get("kernels", {}).get("delivery") == "packed":
+            # Kernel-backed ring: ONE [slots(, P), D] array. The packed D
+            # axis mixes leaves, so only the worker axis can shard; FSDP
+            # archs never reach here (build_engine routes them to tree math).
+            gbuf_sh = (_lead(mesh, None, wax, None) if per_worker
+                       else _lead(mesh, None, None))
+        else:
+            # A per-worker buffer spends the data axis on its worker dim, so
+            # its param dims must not reuse it (FSDP rules would).
+            buf_rules = (rules_lib.strip_data(rules)
+                         if (per_worker and fsdp) else rules)
 
-        def buf_shard(a):
-            base = rules_lib.spec_for(a, mesh, buf_rules)
-            if per_worker:
-                return _lead(mesh, None, wax, *base)
-            return _lead(mesh, None, *base)
+            def buf_shard(a):
+                base = rules_lib.spec_for(a, mesh, buf_rules)
+                if per_worker:
+                    return _lead(mesh, None, wax, *base)
+                return _lead(mesh, None, *base)
 
-        gbuf_sh = jax.tree.map(buf_shard, params_axes, is_leaf=_is_axes_leaf)
+            gbuf_sh = jax.tree.map(buf_shard, params_axes,
+                                   is_leaf=_is_axes_leaf)
         inner_sh = stale_sync.StaleTrainState(
             params=params_sh, opt_state=opt_sh, gbuf=gbuf_sh,
             step=_replicated(mesh), key=_replicated(mesh))
@@ -239,14 +254,24 @@ def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
             api, shape, mesh, rules)
 
     state_sh = EngineState(inner=inner_sh, bound=_replicated(mesh))
+    # Donate the state where aliasing actually elides work: the ring-buffer
+    # modes carry a [slots(, P), ...] gbuf of which ONE slot changes per
+    # step — undonated, XLA materialises the whole ring afresh every step.
+    # sync rewrites params/moments wholesale and simulate ROLLS its pending
+    # ring (every element rewritten), so there donation elides nothing and
+    # jax's per-call donated-buffer bookkeeping is pure overhead — skipped.
+    donate = cfg.donate and cfg.mode in ("stale-psum", "ssp")
     plan = Plan(
         fn=engine._wrap,
         args=(state_struct, batch_struct),
         in_shardings=(state_sh, batch_sh),
         out_shardings=(state_sh, None),
+        donate_argnums=(0,) if donate else (),
         meta={"arch": arch_id, "shape": shape.name, "kind": "train",
               "mode": mode_label("train", cfg.mode, cfg.s),
-              "engine_mode": cfg.mode, "s": cfg.s, "workers": p},
+              "engine_mode": cfg.mode, "s": cfg.s, "workers": p,
+              "kernels": engine.meta.get("kernels"),
+              "donate": donate},
     )
     engine._attach_plan(plan)
     return plan
@@ -281,7 +306,6 @@ def make_train_engine(arch: Union[str, ArchDef], shape: ShapeLike, mesh, *,
         overrides["remat"] = remat_override
     api = arch.api(reduced=reduced, overrides=overrides or None)
     opt_name = optimizer_name or arch.train_optimizer
-    opt = optlib.get_optimizer(opt_name)
 
     if ecfg is not None:
         clashing = {k: v for k, v in dict(
@@ -307,6 +331,16 @@ def make_train_engine(arch: Union[str, ArchDef], shape: ShapeLike, mesh, *,
             mode=mode, s=s,
             num_workers=num_workers or rules_lib.data_extent(mesh),
             buffer_dtype=getattr(api.cfg, "param_dtype", jnp.float32), **kw)
+
+    # The fused-Adam hot spot is an optimizer-construction opt-in, built
+    # AFTER the engine config resolves the kernel mode and gated on the same
+    # placement verdict as the delivery (a packed [D] view of FSDP/model-
+    # sharded params would all-gather the full parameter set every step).
+    from repro.engine.api import kernel_placement_ok
+    fuse_adam = (opt_name == "adam"
+                 and kernel_placement_ok(ecfg.kernels, arch, mesh)[0])
+    opt = optlib.get_optimizer(opt_name, **({"kernel": True} if fuse_adam
+                                            else {}))
 
     engine = build_engine(api, opt, ecfg, mesh=mesh, arch=arch, shape=shape,
                           rules=rules)

@@ -1,0 +1,199 @@
+"""Kernel dispatch: the one layer that decides how each hot spot executes.
+
+Every fused hot spot in the engine (stale delivery, coherence probe, Adam,
+flash attention) routes through a dispatcher here instead of calling a Pallas
+kernel directly. Per call the dispatcher picks a backend:
+
+* ``pallas``           — the compiled Mosaic kernel (real TPU).
+* ``pallas-interpret`` — the same kernel through the Pallas interpreter
+                         (CPU validation; only for small operands — the
+                         interpreter replays the grid sequentially, so big
+                         grids would take minutes).
+* ``ref``              — the jnp oracle from :mod:`repro.kernels.ref`
+                         (odd shapes that violate a kernel's divisibility
+                         contract, or interpret-mode operands over the size
+                         threshold). Same math, fp32 accumulation.
+
+Configuration is read ONCE from the environment at import (no mutable module
+global to flip in the right import order — sharded subprocess tests and real
+TPU runs set env vars instead):
+
+* ``REPRO_KERNELS_INTERPRET``      — "1"/"0" force interpret mode on/off;
+                                     unset/"auto" = interpret unless the
+                                     default backend is a TPU (resolved
+                                     lazily, so importing this module never
+                                     initializes jax's backend).
+* ``REPRO_KERNELS_INTERPRET_MAX``  — max operand elements worth pushing
+                                     through the interpreter (default 2^18).
+
+Backend decisions are recorded at trace time into a report —
+``report()`` / ``report_lines()`` — so drivers and examples can print which
+hot spots ran fused vs ref (``Engine.dispatch_report`` surfaces this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import coherence as _co
+from repro.kernels import flash_attention as _fl
+from repro.kernels import fused_adam as _fa
+from repro.kernels import ref
+from repro.kernels import stale_accum as _sa
+
+
+def _env_tristate(name: str) -> Optional[bool]:
+    val = os.environ.get(name)
+    if val is None:
+        return None
+    v = val.strip().lower()
+    if v in ("", "auto"):
+        return None
+    if v in ("1", "true", "yes", "on"):
+        return True
+    if v in ("0", "false", "no", "off"):
+        return False
+    # A typo here would silently flip every kernel to the wrong backend
+    # (e.g. interpret mode forced ON on a real TPU) — reject it loudly.
+    raise ValueError(f"{name}={val!r}: expected 1/true/yes/on, "
+                     "0/false/no/off, or auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Immutable, env-initialized kernel-dispatch settings."""
+    interpret: Optional[bool]       # None = auto (interpret unless on TPU)
+    interpret_max_elements: int     # ref fallback above this in interpret mode
+
+
+CONFIG = DispatchConfig(
+    interpret=_env_tristate("REPRO_KERNELS_INTERPRET"),
+    interpret_max_elements=int(
+        os.environ.get("REPRO_KERNELS_INTERPRET_MAX", 1 << 18)),
+)
+
+# Width packed flat views are zero-padded to (lcm of the dispatchers' block
+# sizes) so a packed [*, D] operand always meets the divisibility contract.
+PACK_ALIGN = 2048
+
+
+def interpret_mode() -> bool:
+    """Resolved interpret flag (lazy: touching the backend at import time
+    would lock jax's device count before drivers can set XLA_FLAGS)."""
+    if CONFIG.interpret is not None:
+        return CONFIG.interpret
+    return jax.default_backend() != "tpu"
+
+
+# -- decision report ---------------------------------------------------------
+
+_DECISIONS: dict = {}
+
+
+def _decide(op: str, backend: str, why: str = "") -> str:
+    _DECISIONS[op] = backend + (f" ({why})" if why else "")
+    return backend
+
+
+def report() -> dict:
+    """op -> backend decisions recorded since the last reset (trace-time:
+    one entry per compiled call site, not per step)."""
+    return dict(_DECISIONS)
+
+
+def report_lines() -> list:
+    return [f"  {op:<16} -> {backend}" for op, backend in _DECISIONS.items()]
+
+
+def reset_report() -> None:
+    _DECISIONS.clear()
+
+
+def fuses(n_elements: int, divisible: bool = True) -> bool:
+    """Would an operand of this size reach a real kernel (compiled Mosaic or
+    the interpreter), rather than the jnp ref oracle? Callers that must COPY
+    data into a packed view first (e.g. the fused-Adam optimizer) use this to
+    skip the packing when the fused pass wouldn't actually run."""
+    if not divisible:
+        return False
+    if interpret_mode() and n_elements > CONFIG.interpret_max_elements:
+        return False
+    return True
+
+
+def note(op: str, backend: str, why: str = "") -> None:
+    """Record an engine-level routing decision into the dispatch report
+    (e.g. 'tree' when a caller skipped the packed path entirely)."""
+    _decide(op, backend, why)
+
+
+def _backend(op: str, n_elements: int, divisible: bool, why_odd: str) -> str:
+    if not divisible:
+        return _decide(op, "ref", why_odd)
+    if interpret_mode():
+        if n_elements > CONFIG.interpret_max_elements:
+            return _decide(op, "ref", "interpret mode, operand over "
+                           f"{CONFIG.interpret_max_elements} elems")
+        return _decide(op, "pallas-interpret")
+    return _decide(op, "pallas")
+
+
+# -- dispatchers -------------------------------------------------------------
+
+def stale_accum(params, buffer, weights, block_d: int = 1024):
+    """params [D] + sum_s weights[s] * buffer[s, D] — the delayed-update
+    delivery. Falls back to ref when D isn't a block_d multiple."""
+    d = params.shape[-1]
+    s = buffer.shape[0]
+    backend = _backend("stale_accum", s * d, d > 0 and d % block_d == 0,
+                       f"D={d} % block_d={block_d}")
+    if backend == "ref":
+        return ref.stale_accum(params, buffer, weights)
+    return _sa.stale_accum(params, buffer, weights, block_d=block_d,
+                           interpret=backend == "pallas-interpret")
+
+
+def coherence_dots(history, g, block_d: int = 2048):
+    """history [W, D], g [D] -> (dots [W], hist_sq [W], g_sq) in one pass."""
+    w, d = history.shape
+    backend = _backend("coherence_dots", w * d, d > 0 and d % block_d == 0,
+                       f"D={d} % block_d={block_d}")
+    if backend == "ref":
+        return ref.coherence_dots(history, g)
+    return _co.coherence_dots(history, g, block_d=block_d,
+                              interpret=backend == "pallas-interpret")
+
+
+def fused_adam(p, m, v, g, lr, b1=0.9, b2=0.999, eps=1e-8, step=1,
+               block_d: int = 2048):
+    """One fused Adam step over flat [D] views -> (p', m', v')."""
+    d = p.shape[-1]
+    backend = _backend("fused_adam", d, d > 0 and d % block_d == 0,
+                       f"D={d} % block_d={block_d}")
+    if backend == "ref":
+        return ref.fused_adam(p, m, v, g, lr, b1, b2, eps, step)
+    return _fa.fused_adam(p, m, v, g, lr, b1, b2, eps, step, block_d=block_d,
+                          interpret=backend == "pallas-interpret")
+
+
+def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128):
+    """Blockwise attention with the same divisibility guard as the other
+    dispatchers: seq lens that don't divide the block sizes, or head counts
+    that don't form even GQA groups, fall back to the jnp oracle instead of
+    relying on in-kernel padding."""
+    b, sq, h, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    ok = (h % max(hkv, 1) == 0 and hkv > 0
+          and sq % block_q == 0 and sk % block_k == 0)
+    backend = _backend(
+        "flash_attention", b * h * sq * sk, ok,
+        f"Sq={sq}%{block_q} / Sk={sk}%{block_k} / H={h}%Hkv={hkv}")
+    if backend == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, window=window)
+    return _fl.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=backend == "pallas-interpret")

@@ -1,50 +1,46 @@
-"""jit'd dispatch wrappers over the Pallas kernels.
+"""Compatibility wrappers over :mod:`repro.kernels.dispatch`.
 
-``interpret`` defaults to True (this container is CPU-only; the kernel bodies
-execute in Python for validation). On a real TPU deployment set
-``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False) and the same
-BlockSpecs compile to Mosaic. Shapes that violate a kernel's divisibility
-contract fall back to the ref oracle (pad-free correctness beats a fast path).
+Historically this module owned the pallas-vs-ref choice through a mutable
+``INTERPRET`` global, which made behavior depend on import-order mutation
+(sharded subprocess tests and TPU deployments had to flip it before any jit
+trace). The choice now lives in the dispatch layer, configured once from the
+environment: set ``REPRO_KERNELS_INTERPRET=0`` for compiled Mosaic kernels
+(real TPUs), ``=1`` to force the interpreter, or leave unset for automatic
+backend detection. Shapes that violate a kernel's divisibility contract fall
+back to the ref oracle (pad-free correctness beats a fast path).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import sys
+import types
 
-from repro.kernels import fused_adam as _fa
-from repro.kernels import coherence as _co
-from repro.kernels import flash_attention as _fl
-from repro.kernels import ref
-from repro.kernels import stale_accum as _sa
+from repro.kernels.dispatch import (  # noqa: F401  (public re-exports)
+    coherence_dots,
+    flash_attention,
+    fused_adam,
+    stale_accum,
+)
 
-INTERPRET = True
-
-
-def stale_accum(params, buffer, weights, block_d: int = 1024):
-    d = params.shape[-1]
-    if d % block_d:
-        return ref.stale_accum(params, buffer, weights)
-    return _sa.stale_accum(params, buffer, weights, block_d=block_d,
-                           interpret=INTERPRET)
+_REMOVED = ("repro.kernels.ops.INTERPRET was removed: interpret mode is now "
+            "env-configured (REPRO_KERNELS_INTERPRET) and read once by "
+            "repro.kernels.dispatch")
 
 
-def coherence_dots(history, g, block_d: int = 2048):
-    d = g.shape[-1]
-    if d % block_d:
-        return ref.coherence_dots(history, g)
-    return _co.coherence_dots(history, g, block_d=block_d, interpret=INTERPRET)
+class _OpsModule(types.ModuleType):
+    """Rejects both reads AND writes of the removed INTERPRET global — the
+    old documented usage was an assignment, which a plain module-level
+    ``__getattr__`` would silently accept and ignore."""
+
+    def __getattr__(self, name):
+        if name == "INTERPRET":
+            raise AttributeError(_REMOVED)
+        raise AttributeError(
+            f"module {self.__name__!r} has no attribute {name!r}")
+
+    def __setattr__(self, name, value):
+        if name == "INTERPRET":
+            raise AttributeError(_REMOVED)
+        super().__setattr__(name, value)
 
 
-def fused_adam(p, m, v, g, lr, b1=0.9, b2=0.999, eps=1e-8, step=1,
-               block_d: int = 2048):
-    d = p.shape[-1]
-    if d % block_d:
-        return ref.fused_adam(p, m, v, g, lr, b1, b2, eps, step)
-    return _fa.fused_adam(p, m, v, g, lr, b1, b2, eps, step, block_d=block_d,
-                          interpret=INTERPRET)
-
-
-def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128):
-    return _fl.flash_attention(q, k, v, causal=causal, window=window,
-                               block_q=block_q, block_k=block_k,
-                               interpret=INTERPRET)
+sys.modules[__name__].__class__ = _OpsModule

@@ -53,7 +53,7 @@ def active_params(arch_id: str) -> int:
 
 def run_one(arch_id: str, shape_name: str, multi_pod: bool,
             stale_s=None, remat=None, optimizer=None,
-            overrides=None, tag="", mode=None) -> dict:
+            overrides=None, tag="", mode=None, kernels="off") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = math.prod(mesh.devices.shape)
     shape = SHAPES[shape_name]
@@ -61,7 +61,8 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
     kw = {"overrides": overrides}
     if shape.kind == "train":
         kw.update({"stale_s": stale_s, "remat_override": remat,
-                   "optimizer_name": optimizer, "mode": mode})
+                   "optimizer_name": optimizer, "mode": mode,
+                   "kernels": kernels})
     built = planlib.build(arch_id, shape_name, mesh, **kw)
 
     t0 = time.time()
@@ -150,6 +151,10 @@ def main():
                          "sync iff --stale is unset/0)")
     ap.add_argument("--remat", type=lambda s: s == "true", default=None)
     ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--kernels", default="off",
+                    choices=["off", "auto", "on"],
+                    help="lower the kernel-backed (packed ring + fused "
+                         "delivery/Adam, donated state) train step")
     ap.add_argument("--out", default=OUT_DEFAULT)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -185,7 +190,8 @@ def main():
                     try:
                         rec = run_one(arch_id, shape_name, mp,
                                       stale_s=stale, remat=args.remat,
-                                      optimizer=args.optimizer, mode=args.mode)
+                                      optimizer=args.optimizer, mode=args.mode,
+                                      kernels=args.kernels)
                     except Exception as e:  # noqa: BLE001
                         traceback.print_exc()
                         rec = {"key": key, "arch": arch_id, "shape": shape_name,

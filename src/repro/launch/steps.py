@@ -34,15 +34,17 @@ def build_train_step(arch: ArchDef, shape_name: str, mesh,
                      stale_s: Optional[int] = None,
                      optimizer_name: Optional[str] = None,
                      remat_override: Optional[bool] = None,
-                     overrides: Optional[dict] = None) -> Built:
+                     overrides: Optional[dict] = None,
+                     kernels: str = "off") -> Built:
     _warn("build_train_step")
     # Legacy semantics exactly: stale_s None -> sync; any int (including 0)
-    # -> the stale-psum step with that bound.
+    # -> the stale-psum step with that bound. ``kernels`` routes the plan
+    # through the packed/fused + donated hot path (see docs/API.md).
     return _plan.make_train_engine(
         arch, shape_name, mesh, stale_s=stale_s,
         mode=None if stale_s is None else "stale-psum",
         optimizer_name=optimizer_name, remat_override=remat_override,
-        overrides=overrides).plan()
+        overrides=overrides, kernels=kernels).plan()
 
 
 def build_prefill_step(arch: ArchDef, shape_name: str, mesh,

@@ -78,6 +78,11 @@ def main():
                     help="staleness regime (auto: sync iff --stale 0)")
     ap.add_argument("--optimizer", default=None)
     ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--kernels", default="off",
+                    choices=["off", "auto", "on"],
+                    help="route the engine hot spots (stale delivery, "
+                         "coherence probe, Adam) through repro.kernels "
+                         "(off = bitwise-legacy tree math)")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--coherence", action="store_true",
                     help="enable the gradient-coherence monitor + controller")
@@ -99,14 +104,18 @@ def main():
     print(f"arch={args.arch} reduced={args.reduced} family={api.family} "
           f"mode={mode} stale_s={args.stale} workers={args.workers}")
 
-    opt_kwargs = {"lr": args.lr} if args.lr else {}
-    opt = optlib.get_optimizer(args.optimizer or arch.train_optimizer,
-                               **opt_kwargs)
     if mode != "sync" and args.batch % args.workers:
         raise SystemExit(f"mode={mode} needs --batch divisible by --workers")
     mesh = meshlib.parse_host_mesh(args.mesh)
+    opt_name = args.optimizer or arch.train_optimizer
+    opt_kwargs = {"lr": args.lr} if args.lr else {}
+    from repro.engine.api import kernel_placement_ok
+    if opt_name == "adam" and kernel_placement_ok(args.kernels, arch, mesh)[0]:
+        opt_kwargs["kernel"] = True   # fused-Adam hot spot (opt-in)
+    opt = optlib.get_optimizer(opt_name, **opt_kwargs)
     shape = InputShape(f"train_cli_{args.seq}", args.seq, args.batch, "train")
     ecfg = EngineConfig(mode=mode, num_workers=args.workers, s=args.stale,
+                        kernels=args.kernels,
                         ssp_steps=max(args.steps, 1), ssp_seed=args.seed)
     engine = build_engine(api, opt, ecfg, mesh=mesh, arch=arch, shape=shape)
     state = engine.init(jax.random.PRNGKey(args.seed))
@@ -125,7 +134,7 @@ def main():
         hooks.append(CoherenceHook(
             api.loss, probe, dim=n_params,
             window=max(args.stale, 4), every=args.log_every,
-            controller=controller))
+            controller=controller, kernels=args.kernels != "off"))
     if args.ckpt_every and args.ckpt_dir:
         hooks.append(CheckpointHook(args.ckpt_dir, args.ckpt_every,
                                     extra={"arch": args.arch}))
@@ -133,6 +142,13 @@ def main():
 
     result = Trainer(engine, hooks=hooks).run(
         next_batch, args.steps, state=state, log_every=args.log_every)
+
+    if args.kernels != "off":
+        rep = engine.dispatch_report()
+        print(f"kernel dispatch: config={rep['config']} "
+              f"delivery={rep['delivery']}")
+        for op, backend in rep["decisions"].items():
+            print(f"  {op:<16} -> {backend}")
 
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -5,8 +5,9 @@ the substrate self-contained (the brief: build every substrate in JAX).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -86,3 +87,84 @@ def tree_flatten_to_vector(a: Pytree) -> jax.Array:
 def tree_allfinite(a: Pytree) -> jax.Array:
     parts = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(a)]
     return functools.reduce(jnp.logical_and, parts, jnp.bool_(True))
+
+
+# -- packed flat views (the kernel dispatch substrate) -----------------------
+#
+# The Pallas hot-spot kernels (repro.kernels) operate on contiguous [D] /
+# [S, D] views, not pytrees. A PackSpec records how a tree's leaves lay out
+# inside one flat vector so the engine can pack gradients once per step, run
+# the fused kernel over the packed view, and unpack the result — instead of
+# per-leaf tree math. Specs are static (shapes/dtypes only), so building one
+# from traced leaves inside a jitted step is free.
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static layout of a pytree inside a flat [D] vector."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]   # per-leaf trailing shapes
+    dtypes: tuple                         # per-leaf dtypes
+    sizes: Tuple[int, ...]                # per-leaf element counts
+    total: int                            # D = sum(sizes)
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        out, off = [], 0
+        for s in self.sizes:
+            out.append(off)
+            off += s
+        return tuple(out)
+
+
+def pack_spec(a: Pytree, lead_ndim: int = 0) -> PackSpec:
+    """Layout of ``a``'s leaves (ignoring ``lead_ndim`` leading axes) in one
+    flat vector. Works on arrays, tracers, or ShapeDtypeStructs."""
+    leaves, treedef = jax.tree.flatten(a)
+    shapes = tuple(tuple(x.shape[lead_ndim:]) for x in leaves)
+    sizes = tuple(int(functools.reduce(lambda p, q: p * q, s, 1))
+                  for s in shapes)
+    return PackSpec(treedef=treedef, shapes=shapes,
+                    dtypes=tuple(x.dtype for x in leaves),
+                    sizes=sizes, total=sum(sizes))
+
+
+def padded_size(total: int, pad_to: int) -> int:
+    """D rounded up to a multiple of ``pad_to`` (the kernel block width)."""
+    return total + (-total % pad_to) if pad_to and total else total
+
+
+def tree_pack(a: Pytree, lead_ndim: int = 0, dtype=jnp.float32,
+              pad_to: int = 0) -> jax.Array:
+    """Concatenate leaves into a contiguous [*lead, D] view.
+
+    ``lead_ndim`` leading axes (e.g. a worker axis) are preserved; trailing
+    dims flatten into D. fp32 by default — the kernels accumulate in fp32,
+    and widening casts round-trip exactly through :func:`tree_unpack`.
+    ``pad_to`` zero-pads D up to a block multiple so packed views always
+    satisfy the kernels' divisibility contract (the pad tail is inert:
+    zero gradients/moments stay zero, and unpack ignores it)."""
+    leaves = jax.tree.leaves(a)
+    if not leaves:
+        return jnp.zeros((0,), dtype)
+    parts = [x.reshape(x.shape[:lead_ndim] + (-1,)).astype(dtype)
+             for x in leaves]
+    vec = jnp.concatenate(parts, axis=-1)
+    pad = padded_size(vec.shape[-1], pad_to) - vec.shape[-1]
+    if pad:
+        vec = jnp.pad(vec, [(0, 0)] * (vec.ndim - 1) + [(0, pad)])
+    return vec
+
+
+def tree_unpack(vec: jax.Array, spec: PackSpec, dtype=None) -> Pytree:
+    """Inverse of :func:`tree_pack`: split the last axis of ``vec`` per the
+    spec and reshape each piece back to its leaf shape. Leading axes of
+    ``vec`` are broadcast onto every leaf. ``dtype`` overrides the per-leaf
+    spec dtypes (e.g. keep everything fp32 for optimizer math)."""
+    lead = vec.shape[:-1]
+    pieces, off = [], 0
+    for shape, size, leaf_dtype in zip(spec.shapes, spec.sizes, spec.dtypes):
+        piece = jax.lax.slice_in_dim(vec, off, off + size, axis=vec.ndim - 1)
+        pieces.append(piece.reshape(lead + shape)
+                      .astype(dtype if dtype is not None else leaf_dtype))
+        off += size
+    return jax.tree.unflatten(spec.treedef, pieces)

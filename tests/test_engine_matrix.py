@@ -50,10 +50,10 @@ def make_batch(spec, key):
     return out
 
 
-def make_engine(arch_id, mode, mesh):
+def make_engine(arch_id, mode, mesh, kernels="off"):
     return planlib.make_train_engine(
         arch_id, SHAPE, mesh, mode=mode, stale_s=2, num_workers=2,
-        reduced=True, ssp_steps=8)
+        reduced=True, ssp_steps=8, kernels=kernels)
 
 
 def run_combo(engine, steps=2, seed=0):
@@ -120,6 +120,27 @@ def test_matrix_single_device(mode, arch_id):
 
 def test_engine_plan_matches_legacy_steps_path():
     check_legacy_equivalence(meshlib.make_host_mesh(1, 1))
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+@pytest.mark.parametrize("mode", MODES)
+def test_matrix_kernels_on_matches_off(mode, arch_id):
+    """kernels="on" (packed ring + fused delivery/Adam + donated planned
+    step) tracks the bitwise-legacy kernels="off" path within fp32 tolerance
+    on every mode x arch combination."""
+    mesh = meshlib.make_host_mesh(1, 1)
+    e_off = make_engine(arch_id, mode, mesh)
+    e_on = make_engine(arch_id, mode, mesh, kernels="on")
+    if mode in ("stale-psum", "ssp"):
+        assert e_on.meta["kernels"]["delivery"] == "packed"
+        assert e_on.plan().donate_argnums == (0,)
+    s_off, l_off = run_combo(e_off)
+    s_on, l_on = run_combo(e_on)
+    np.testing.assert_allclose(l_off, l_on, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(e_off.params(s_off)),
+                    jax.tree.leaves(e_on.params(s_on))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
 
 
 def test_matrix_two_device_sharded():

@@ -9,7 +9,8 @@ try:
 except ImportError:  # optional dep: deterministic fallback (see the shim)
     from _hypothesis_fallback import given, settings, st
 
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
+from repro.kernels import flash_attention as _fl
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -84,15 +85,37 @@ def test_fused_adam_agrees_with_optimizer_module():
     (33, 77, 6, 3, 16, 20, jnp.float32),
 ])
 def test_flash_attention_sweep(sq, sk, h, hkv, hd, win, dtype):
+    """Raw kernel (padding path included) vs the oracle — the dispatcher
+    would route non-divisible seq lens to ref, so call the kernel directly
+    to keep its padding/masking under test."""
     q = jax.random.normal(jax.random.PRNGKey(6), (2, sq, h, hd), dtype)
     k = jax.random.normal(jax.random.PRNGKey(7), (2, sk, hkv, hd), dtype)
     v = jax.random.normal(jax.random.PRNGKey(8), (2, sk, hkv, hd), dtype)
-    got = ops.flash_attention(q, k, v, causal=True, window=win,
-                              block_q=32, block_k=64)
+    got = _fl.flash_attention(q, k, v, causal=True, window=win,
+                              block_q=32, block_k=64, interpret=True)
     want = ref.flash_attention(q, k, v, causal=True, window=win)
     tol = 2e-3 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("sq,sk,expect_ref", [
+    (128, 128, False),   # divisible: the kernel runs
+    (100, 260, True),    # odd seq lens: dispatcher falls back to ref
+])
+def test_flash_attention_dispatch_guard(sq, sk, expect_ref):
+    """ops/dispatch guard (same contract as the other three dispatchers):
+    seq lens that don't divide the blocks fall back to ref instead of
+    relying on in-kernel padding."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, sq, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, sk, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, sk, 2, 32))
+    got = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=64)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    backend = dispatch.report()["flash_attention"]
+    assert backend.startswith("ref") == expect_ref, backend
 
 
 def test_flash_attention_matches_model_attention():
