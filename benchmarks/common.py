@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import StalenessConfig, UniformDelay
-from repro.core.delay import DelayModel
+from repro.delays import DelayModel
 from repro.data import ShardedBatches, synthetic
 from repro.engine import EngineConfig, Trainer, build_engine
 from repro.models import mf, mlp, resnet, vae

@@ -3,10 +3,14 @@
 Times one planned engine step per staleness mode in two configurations:
 
 * ``tree_undonated`` — kernels="off", donate=False: per-leaf tree math and a
-  full-state copy every step (the pre-dispatch execution path).
-* ``fused_donated``  — kernels="auto", donate=True: packed ring buffer +
+  full-state copy every step (the pre-dispatch execution path). In simulate
+  mode this includes the per-leaf [P, B, ...] pending-ring ROLL (every ring
+  element rewritten every step).
+* ``fused_donated``  — kernels="auto", donate=True: packed ring buffers +
   fused delivery/Adam through ``repro.kernels.dispatch``, EngineState donated
-  so XLA aliases the ring/opt/params buffers in place.
+  so XLA aliases the ring/opt/params buffers in place. simulate mode runs the
+  packed [P, slots, D] pending ring with a rotating cursor (one slot zeroed +
+  scatter-add, no roll).
 
 Writes ``experiments/BENCH_engine_step.json`` — the per-mode step trajectory
 the CI smoke tracks (the fused+donated step must not be slower on any mode).
@@ -121,12 +125,14 @@ def main(quick: bool = True, out: str = "experiments/BENCH_engine_step.json"):
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"wrote {out}")
-    # Modes the kernels/donation don't route (sync, simulate) run the exact
-    # same compiled step in both variants; readings within 5% are parity.
+    # sync is the only mode the kernels/donation don't route (it runs the
+    # exact same compiled step in both variants; readings within 5% are
+    # parity). The ring modes AND packed simulate must not be slower.
     slower = [m for m, r in results.items() if r["speedup"] < 0.95]
     if slower:
         print(f"NOTE: fused+donated slower on: {slower} "
               "(CPU wall-clock; rerun with --full for tighter floors)")
+    return record
 
 
 if __name__ == "__main__":

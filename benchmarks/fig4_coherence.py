@@ -16,7 +16,7 @@ import numpy as np
 from benchmarks import common
 from repro import treemath as tm
 from repro.core import UniformDelay, init_coherence, observe
-from repro.core.delay import matched_geometric
+from repro.delays import matched_geometric
 from repro.data import ShardedBatches, synthetic
 from repro.engine import EngineConfig, build_engine
 from repro.models import mlp

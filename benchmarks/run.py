@@ -7,9 +7,54 @@ EXPERIMENTS.md (hours; run in the background). ``--only fig1`` selects one.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
+
+SUMMARY_PATH = "experiments/BENCH_summary.json"
+# Where each bench leaves its committed record (None = prints only).
+BENCH_FILES = {
+    "fig1": "experiments/fig1.json",
+    "fig2": "experiments/fig2.json",
+    "fig3": "experiments/fig3.json",
+    "fig4": "experiments/fig4.json",
+    "fig5": "experiments/fig5.json",
+    "theorem1": "experiments/theorem1.json",
+    "engine_step": "experiments/BENCH_engine_step.json",
+}
+
+
+def refresh_summary(name: str, timestamp: str, result=None,
+                    out: str = SUMMARY_PATH) -> None:
+    """After each registered bench: refresh the machine-readable perf
+    trajectory — one headline entry per bench (speedups where the bench
+    measures one) instead of scattered per-bench files. ``timestamp`` is
+    passed in by the caller so one suite run shares one stamp."""
+    headline: dict = {"ok": True}
+    src = BENCH_FILES.get(name)
+    if src and os.path.exists(src):
+        headline["file"] = src
+    if name == "engine_step":
+        modes = (result or {}).get("modes")
+        if modes is None and src and os.path.exists(src):
+            with open(src) as f:
+                modes = json.load(f).get("modes", {})
+        if modes:
+            speedups = {m: r["speedup"] for m, r in modes.items()}
+            headline["speedups"] = speedups
+            headline["min_speedup"] = min(speedups.values())
+    data = {"benches": {}}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                data = json.load(f)
+        except json.JSONDecodeError:
+            pass
+    data.setdefault("benches", {})[name] = {**headline, "at": timestamp}
+    data["updated"] = timestamp
+    with open(out, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
 
 
 def main() -> None:
@@ -61,13 +106,16 @@ def main() -> None:
     }
 
     names = args.only.split(",") if args.only else list(suite)
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
     for name in names:
         if name not in suite:
             raise SystemExit(f"unknown benchmark {name!r}; have {list(suite)}")
         t0 = time.time()
         print(f"\n===== {name} ({'full' if args.full else 'quick'}) =====",
               flush=True)
-        suite[name]()
+        ret = suite[name]()
+        refresh_summary(name, stamp, result=ret if isinstance(ret, dict)
+                        else None)
         print(f"===== {name} done in {time.time()-t0:.0f}s =====", flush=True)
 
 

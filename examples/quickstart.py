@@ -46,6 +46,6 @@ if __name__ == "__main__":
     print(f"staleness slowdown: {stale / sync:.2f}x  (paper Fig. 1: 1-6x)")
     rep = engine.dispatch_report()
     print(f"kernel dispatch: config={rep['config']} delivery={rep['delivery']}"
-          " (simulate-mode delivery is per-worker tree math by design)")
+          " (packed = the [P, slots, D] pending ring + prefetched arrivals)")
     for op, backend in rep["decisions"].items():
         print(f"  {op:<16} -> {backend}")

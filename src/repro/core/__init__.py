@@ -8,11 +8,15 @@ unified execution surface in :mod:`repro.engine`
 API over simulate / stale-psum / ssp / sync instead of four incompatible
 ones.  Everything re-exported here is kept stable for existing callers.
 """
-from repro.core.delay import (
+# Delay models live in repro.delays since PR 4 (repro.core.delay is a
+# deprecated shim); re-exported here so `from repro.core import UniformDelay`
+# keeps working without tripping the shim's DeprecationWarning.
+from repro.delays.models import (
     ConstantDelay,
     DelayModel,
     GeometricDelay,
     UniformDelay,
+    Zero,
     matched_geometric,
 )
 from repro.core.staleness import (

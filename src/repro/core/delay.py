@@ -1,135 +1,33 @@
-"""Delay models from the paper (Section 3, Appendix A.3).
+"""Deprecated shim: the delay models moved to :mod:`repro.delays`.
 
-The paper's simulation model: an update generated by worker ``p`` at iteration
-``t`` arrives at worker ``p'`` at the start of iteration ``t + 1 + r``, with
-
-  * uniform:   ``r ~ Categorical(0, 1, ..., s-1)`` with equal weights
-               (average total delay s/2 + 1, Section 3);
-  * geometric: discrete exponential; one randomly chosen straggler per
-               iteration has a large mean delay (success prob p=0.1), all
-               other workers draw from a geometric matched to the same mean
-               as the uniform model (Appendix A.3);
-  * constant:  every delay equals a fixed value (useful for theory checks);
-  * zero:      ``s = 0`` — updates always arrive at the next iteration, which
-               with one worker reduces to sequential execution (Section 3).
-
-All samplers return int32 delays in ``[0, max_delay]``: ``max_delay = s - 1``
-for uniform (``0`` when ``s == 0``) and a truncation bound for geometric so
-the delivery ring buffer stays finite. Samplers are pure functions of a PRNG
-key and are shape-polymorphic: ``sample(key, shape)``.
+Everything exported here is the *same object* as in ``repro.delays`` (no
+copy, so sampling stays bitwise-identical — tested in tests/test_delays.py).
+New code should import from ``repro.delays``, which also carries the
+trace-driven (``Trace``), table-driven (``Schedule``) and multi-pod
+(``MultiPod``) specs this module never had.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.delays.models import (  # noqa: F401  (re-exports)
+    ConstantDelay,
+    DelayModel,
+    DelaySource,
+    DelaySpec,
+    GeometricDelay,
+    UniformDelay,
+    Zero,
+    as_spec,
+    matched_geometric,
+)
 
+warnings.warn(
+    "repro.core.delay is deprecated; import from repro.delays "
+    "(same classes, plus Schedule/Trace/MultiPod)",
+    DeprecationWarning, stacklevel=2)
 
-@dataclasses.dataclass(frozen=True)
-class DelayModel:
-    """Base class. ``bound`` is the (inclusive) max delay the sampler emits —
-    it sizes the delivery ring buffer (``bound + 1`` slots)."""
-
-    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
-        raise NotImplementedError
-
-    @property
-    def bound(self) -> int:
-        raise NotImplementedError
-
-    @property
-    def mean_total_delay(self) -> float:
-        """Mean of (1 + r): iterations until delivery."""
-        raise NotImplementedError
-
-
-@dataclasses.dataclass(frozen=True)
-class UniformDelay(DelayModel):
-    """r ~ Categorical(0..s-1), the paper's primary model. s=0 => always 0."""
-
-    s: int
-
-    def sample(self, key, shape):
-        if self.s <= 1:
-            return jnp.zeros(shape, jnp.int32)
-        return jax.random.randint(key, shape, 0, self.s, dtype=jnp.int32)
-
-    @property
-    def bound(self) -> int:
-        return max(self.s - 1, 0)
-
-    @property
-    def mean_total_delay(self) -> float:
-        return 1.0 + (max(self.s, 1) - 1) / 2.0
-
-
-@dataclasses.dataclass(frozen=True)
-class ConstantDelay(DelayModel):
-    value: int
-
-    def sample(self, key, shape):
-        return jnp.full(shape, self.value, jnp.int32)
-
-    @property
-    def bound(self) -> int:
-        return self.value
-
-    @property
-    def mean_total_delay(self) -> float:
-        return 1.0 + self.value
-
-
-@dataclasses.dataclass(frozen=True)
-class GeometricDelay(DelayModel):
-    """Appendix A.3: per iteration one uniformly chosen straggler worker draws
-    its delay from Geometric(p_straggler); everyone else draws from
-    Geometric(p_normal). Delays are truncated at ``trunc`` to keep the
-    delivery buffer finite (the tail mass is clamped, not dropped).
-
-    ``sample`` expects ``shape == (P, P)`` (src worker, dst worker) or any
-    shape whose leading axis is the source-worker axis — the straggler is a
-    *source*: all of its outgoing updates suffer the large delay (A.3).
-    """
-
-    p_normal: float
-    p_straggler: float = 0.1
-    trunc: int = 63
-
-    def sample(self, key, shape):
-        kgeo, kstrag = jax.random.split(key)
-        u = jax.random.uniform(kgeo, shape, minval=1e-7, maxval=1.0)
-        p_workers = shape[0] if len(shape) else 1
-        straggler = jax.random.randint(kstrag, (), 0, max(p_workers, 1))
-        src = jax.lax.broadcasted_iota(jnp.int32, shape, 0) if len(shape) else jnp.int32(0)
-        p = jnp.where(src == straggler, self.p_straggler, self.p_normal)
-        draws = jnp.floor(jnp.log(u) / jnp.log1p(-p)).astype(jnp.int32)
-        return jnp.clip(draws, 0, self.trunc)
-
-    @property
-    def bound(self) -> int:
-        return self.trunc
-
-    @property
-    def mean_total_delay(self) -> float:
-        # Ignoring truncation and straggler mixing (diagnostic only).
-        return 1.0 + (1.0 - self.p_normal) / self.p_normal
-
-
-def matched_geometric(s: int, p_workers: int, p_straggler: float = 0.1,
-                      trunc: int = 63) -> GeometricDelay:
-    """Geometric model whose *mean* delay (after factoring in the straggler)
-    matches UniformDelay(s), per Appendix A.3.
-
-    mean_target = (s-1)/2.  With one straggler out of P:
-      mean = (1/P) * (1-ps)/ps + ((P-1)/P) * (1-pn)/pn  == mean_target
-    solve for pn.
-    """
-    target = (max(s, 1) - 1) / 2.0
-    frac_strag = 1.0 / max(p_workers, 1)
-    strag_mean = (1.0 - p_straggler) / p_straggler
-    rest = (target - frac_strag * strag_mean) / max(1.0 - frac_strag, 1e-9)
-    rest = max(rest, 1e-3)
-    pn = 1.0 / (1.0 + rest)
-    return GeometricDelay(p_normal=float(pn), p_straggler=p_straggler, trunc=trunc)
+__all__ = [
+    "ConstantDelay", "DelayModel", "DelaySource", "DelaySpec",
+    "GeometricDelay", "UniformDelay", "Zero", "as_spec", "matched_geometric",
+]

@@ -32,8 +32,10 @@ def simulate_ssp_clocks(cfg: SSPConfig, speeds: jax.Array) -> dict:
     """Event-driven SSP simulation on per-(worker, iteration) work durations.
 
     ``speeds``: [T, P] positive durations of each worker's t-th iteration.
-    Returns finish times, per-iteration waiting stalls, and the distribution
-    of read staleness (clock gap to slowest worker at read time).
+    Returns finish times, the exact start times the gate admitted (used by
+    ``ssp_delay_schedule`` for epsilon-free tie-breaking), per-iteration
+    waiting stalls, and the distribution of read staleness (clock gap to
+    slowest worker at read time).
     """
     t_steps, p = speeds.shape
 
@@ -44,10 +46,10 @@ def simulate_ssp_clocks(cfg: SSPConfig, speeds: jax.Array) -> dict:
         start = jnp.maximum(finish, jnp.where(cfg.bound >= p, finish, gate))
         new_finish = start + dur
         stall = start - finish
-        return new_finish, (stall, new_finish)
+        return new_finish, (stall, new_finish, start)
 
     finish0 = jnp.zeros((p,), speeds.dtype)
-    _, (stalls, finishes) = jax.lax.scan(one_clock, finish0, speeds)
+    _, (stalls, finishes, starts) = jax.lax.scan(one_clock, finish0, speeds)
 
     # Read staleness at clock c: how many clocks behind is the slowest
     # worker when the fastest starts c. Upper-bounded by cfg.bound.
@@ -55,6 +57,7 @@ def simulate_ssp_clocks(cfg: SSPConfig, speeds: jax.Array) -> dict:
     spread = finishes.max(axis=1) - finishes.min(axis=1)
     return {
         "finish_times": finishes,
+        "start_times": starts,
         "stalls": stalls,
         "total_stall": stalls.sum(),
         "makespan": finishes[-1].max(),
@@ -84,15 +87,19 @@ def ssp_delay_schedule(cfg: SSPConfig, speeds: jax.Array) -> jax.Array:
     """
     sim = simulate_ssp_clocks(cfg, speeds)
     finishes = jnp.asarray(sim["finish_times"])          # [T, P]
-    starts = finishes - speeds                           # [T, P]
+    # Start times come straight out of the clock scan — NOT recomputed as
+    # finish - dur, whose rounding used to need a "+ 1e-9" tie-break that
+    # vanishes below float32 ULP at large absolute times. A start gated on a
+    # finish is bitwise EQUAL to it (the gate is a sorted finish value), so
+    # side="right" resolves start-vs-finish ties exactly at any magnitude.
+    starts = jnp.asarray(sim["start_times"])             # [T, P]
     t_steps = finishes.shape[0]
     # done[c, p, q] = clocks worker q completed by the time p starts clock c
     # = #{k : finish[k, q] <= start[c, p]}. Each worker's finish times are
     # non-decreasing in the clock index, so this is a searchsorted per q —
     # O(T P^2 log T) instead of materializing a [T, P, T, P] comparison.
     done = jax.vmap(  # over worker q's finish column
-        lambda col: jnp.searchsorted(col, starts.reshape(-1) + 1e-9,
-                                     side="right"),
+        lambda col: jnp.searchsorted(col, starts.reshape(-1), side="right"),
         in_axes=1, out_axes=1)(finishes)                 # [T*P, P(q)]
     done = done.reshape(t_steps, cfg.num_workers, cfg.num_workers)
     gap = jnp.arange(t_steps)[:, None] - jnp.min(done, axis=2)

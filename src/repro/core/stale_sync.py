@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import treemath as tm
-from repro.core.delay import DelayModel, UniformDelay
+from repro.delays.models import DelaySpec, UniformDelay, as_spec
+from repro.delays.schedule import Schedule
 from repro.kernels import dispatch
 from repro.optim.optimizers import Optimizer
 
@@ -43,7 +44,9 @@ Pytree = Any
 class StaleSyncConfig:
     num_workers: int                 # data-parallel extent (pods * data)
     s: int                           # staleness bound (0 = synchronous)
-    delay: Optional[DelayModel] = None   # defaults to UniformDelay(s)
+    # Any repro.delays spec (samplers, Schedule, Trace, MultiPod) or a
+    # legacy DelayModel; defaults to UniformDelay(s).
+    delay: Optional[DelaySpec] = None
     buffer_dtype: Any = jnp.float32
     # True: per-worker delays d_p with a [slots, P, ...] buffer (the paper's
     # simulation semantics). False: ONE sampled delay per step over the
@@ -65,6 +68,8 @@ class StaleSyncConfig:
     def __post_init__(self):
         if self.delay is None:
             object.__setattr__(self, "delay", UniformDelay(self.s))
+        else:
+            object.__setattr__(self, "delay", as_spec(self.delay))
         if self.delay_table is not None and not self.per_worker_delays:
             raise ValueError("delay_table requires per_worker_delays=True")
 
@@ -118,6 +123,18 @@ def make_stale_train_step(
     under pjit shards over the data axis — per-device work is identical to
     a plain data-parallel step)."""
     p = cfg.num_workers
+    # One realized delay source for the whole step (repro.delays): the
+    # legacy ``delay_table`` becomes a Schedule source; samplers draw from
+    # the same per-step key as before (bitwise-identical trajectories,
+    # tested). Schedules whose bound exceeds the ring would silently wrap
+    # onto much fresher slots, so those are clamped — a no-op for specs the
+    # engine validated against the ring size.
+    if cfg.delay_table is not None:
+        source = Schedule(cfg.delay_table).realize(num_workers=p)
+    else:
+        source = cfg.delay.realize(
+            num_workers=p if cfg.per_worker_delays else None)
+    clamp_slots = source.bound > cfg.slots - 1
 
     def per_worker_grads(params, batch):
         def one(b):
@@ -176,12 +193,9 @@ def make_stale_train_step(
                 agg = gmean
             staleness = jnp.zeros((p,), jnp.int32)
         elif cfg.per_worker_delays:
-            if cfg.delay_table is not None:
-                table = jnp.asarray(cfg.delay_table, jnp.int32)
-                d = jnp.minimum(table[jnp.mod(state.step, table.shape[0])],
-                                slots - 1)
-            else:
-                d = cfg.delay.sample(kdelay, (p,))
+            d = source.delays(kdelay, state.step, (p,))
+            if clamp_slots:
+                d = jnp.minimum(d, slots - 1)
             if bound is not None:
                 d = jnp.minimum(d, jnp.asarray(bound, jnp.int32))
             d = jnp.minimum(d, state.step)          # no history before step 0
@@ -204,7 +218,9 @@ def make_stale_train_step(
             staleness = d
         else:
             # Theorem-1 form: one delayed AGGREGATE gradient per step.
-            d = cfg.delay.sample(kdelay, ())
+            d = source.delays(kdelay, state.step, ())
+            if clamp_slots:
+                d = jnp.minimum(d, slots - 1)
             if bound is not None:
                 d = jnp.minimum(d, jnp.asarray(bound, jnp.int32))
             d = jnp.minimum(d, state.step)

@@ -6,21 +6,38 @@ Semantics (Section 3 of the paper):
     its own cache (SGD-family step, Gibbs count delta, blackbox-VI step, ...).
   * The update is delivered to every worker ``p'`` (including ``p`` itself) at
     the start of iteration ``t + 1 + r_{p,p'}^t`` with ``r`` drawn from the
-    configured delay model.
+    configured delay spec (``repro.delays``).
   * Evaluation reads worker 0's cache (caches are symmetric).
 
 Implementation: caches are stacked on a leading worker axis ``[P, ...]`` and
-in-flight updates live in a delivery ring buffer ``pending`` with leaves
-``[P, B, ...]`` where ``B = delay.bound + 1``; slot ``d`` of worker ``p`` holds
-the sum of updates scheduled to land on ``p`` in ``d + 1`` iterations. One
-engine step is:
+in-flight updates live in a delivery ring buffer ``pending``. Two layouts:
 
-  1. deliver   -- ``caches[p] += pending[p, 0]``; roll the buffer left.
+* tree (default, ``kernels=False``): leaves ``[P, B, ...]`` with
+  ``B = delay.bound + 1``; slot ``d`` of worker ``p`` holds the sum of
+  updates landing on ``p`` in ``d + 1`` iterations. Each step delivers slot
+  0 and ROLLS the buffer left — every ring element is rewritten. Bitwise
+  legacy trajectories.
+* packed (``kernels=True``): ONE contiguous ``ring [P, B, D]`` array of
+  packed flat rows (``treemath.tree_pack``) addressed by a rotating cursor
+  (slot ``t mod B`` = step ``t``'s arrivals), plus a PREFETCHED
+  ``arrived [P, D]`` row carried in the state. Each step delivers from the
+  prefetched row (fused into the packed caches view through
+  ``repro.kernels.dispatch.stale_accum``), zeroes the consumed slot,
+  scatter-adds the P^2 new packed rows, and only THEN re-slices the next
+  step's arrivals. Ordering matters: a slot read scheduled *before* ring
+  writes is an anti-dependency XLA CPU resolves by copying the whole
+  donated ring (measured: 2 full copies per step); the end-of-step
+  prefetch is a true dependency, so the ring updates strictly in place —
+  the packed step touches O(P^2 · D) bytes instead of the tree layout's
+  O(P · B · D) roll. fp32-tolerance equivalent to the tree layout.
+
+One engine step is:
+
+  1. deliver   -- apply this iteration's arrivals to the caches.
   2. compute   -- ``vmap`` the user's ``update_fn`` over the worker axis.
-  3. dispatch  -- sample the delay matrix ``r[src, dst]`` and scatter each
-                  update into ``pending[dst, r[src, dst]]`` (a one-hot einsum,
-                  which under GSPMD lowers to a single all-gather when the
-                  worker axis is sharded over the mesh's ``data`` axis).
+  3. dispatch  -- draw the delay matrix ``r[src, dst]`` from the realized
+                  delay source and scatter each update into the slot it
+                  arrives in.
 
 Because the whole engine is pure array math over the leading worker axis, the
 *same* code is the single-host simulator (paper's setting) and the distributed
@@ -41,7 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import treemath as tm
-from repro.core.delay import DelayModel, UniformDelay
+from repro.delays.models import DelayModel, DelaySpec, UniformDelay, as_spec
 
 Pytree = Any
 # update_fn(params, update_state, batch, key) -> (update, new_update_state, metrics)
@@ -53,10 +70,21 @@ ServerApply = Callable[[Pytree, Pytree, Pytree], Tuple[Pytree, Pytree]]
 @dataclasses.dataclass(frozen=True)
 class StalenessConfig:
     num_workers: int
-    delay: DelayModel
+    delay: DelaySpec           # any repro.delays spec (or legacy DelayModel)
     # Apply delivered aggregates through a server-side transform instead of
     # plain addition (ablation: where does Adam state live?).
     server_side: bool = False
+    # Packed [P, B, D] pending ring + fused delivery via
+    # repro.kernels.dispatch (see module docstring). False keeps the legacy
+    # per-leaf [P, B, ...] layout (bitwise-identical trajectories).
+    kernels: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "delay", as_spec(self.delay))
+        if self.kernels and self.server_side:
+            raise ValueError(
+                "kernels=True is unsupported with server_side=True: the "
+                "server transform consumes per-leaf arrivals")
 
     @property
     def buffer_slots(self) -> int:
@@ -67,11 +95,23 @@ class StalenessConfig:
 @dataclasses.dataclass
 class SimState:
     caches: Pytree        # [P, ...] per-worker model caches
-    pending: Pytree       # [P, B, ...] delivery ring buffer (slot 0 = next)
+    pending: Pytree       # [P, B, ...] ring (packed: {"hist", "arrival"})
     update_state: Pytree  # [P, ...] per-worker algorithm state (opt moments, z's, ...)
     server_state: Pytree  # [P, ...] per-worker server-side transform state (or ())
     step: jax.Array       # scalar int32 iteration counter
     key: jax.Array        # PRNG key threaded through delay + update sampling
+
+
+def _packed_width(params: Pytree) -> int:
+    from repro.kernels import dispatch
+    return tm.padded_size(tm.pack_spec(params).total, dispatch.PACK_ALIGN)
+
+
+def _is_packed(state: SimState) -> bool:
+    """Packed states carry ONE pending array whose tree shape differs from
+    the caches tree (a single [P, B, D] leaf)."""
+    return (jax.tree.structure(state.pending)
+            != jax.tree.structure(state.caches))
 
 
 def init_sim_state(
@@ -88,9 +128,19 @@ def init_sim_state(
     """
     p = cfg.num_workers
     caches = tm.tree_broadcast_leading(params, p)
-    pending = jax.tree.map(
-        lambda x: jnp.zeros((p, cfg.buffer_slots) + x.shape, x.dtype), params
-    )
+    if cfg.kernels:
+        # ring[dst, b, :] = packed sum of updates arriving on dst at the
+        # next step congruent to b (mod B); arrived = the prefetched slot
+        # for the CURRENT step (see make_sim_step's packed_step).
+        width = _packed_width(params)
+        pending = {
+            "ring": jnp.zeros((p, cfg.buffer_slots, width), jnp.float32),
+            "arrived": jnp.zeros((p, width), jnp.float32),
+        }
+    else:
+        pending = jax.tree.map(
+            lambda x: jnp.zeros((p, cfg.buffer_slots) + x.shape, x.dtype),
+            params)
     return SimState(
         caches=caches,
         pending=pending,
@@ -104,8 +154,9 @@ def init_sim_state(
 
 
 def draw_delay_matrix(key: jax.Array, delay: DelayModel, p: int) -> jax.Array:
-    """``r[src, dst]`` — shared helper so the simulator and the distributed
-    faithful mode draw *identical* delays from the same key (tested)."""
+    """``r[src, dst]`` — legacy helper (samplers only); the engine step now
+    draws through ``delay.realize(...).delays(key, step, (p, p))``, which for
+    samplers is this exact call (tested bitwise)."""
     return delay.sample(key, (p, p))
 
 
@@ -138,6 +189,61 @@ def make_sim_step(
     """
     if cfg.server_side and server_apply is None:
         raise ValueError("server_side=True requires a server_apply transform")
+    p = cfg.num_workers
+    slots = cfg.buffer_slots
+    source = cfg.delay.realize(num_workers=p)
+
+    def packed_step(state: SimState, batches: Pytree,
+                    bound: Optional[jax.Array] = None) -> Tuple[SimState, dict]:
+        from repro.kernels import dispatch
+        key, kdelay, kupd = jax.random.split(state.key, 3)
+        pspec = tm.pack_spec(state.caches, lead_ndim=1)
+        ring = state.pending["ring"]
+
+        # 1. deliver from the PREFETCHED arrivals (no ring read here — see
+        #    module docstring): one fused accumulate over the flattened
+        #    packed caches view, the same stale_accum hot spot as the
+        #    gradient ring.
+        arrived = state.pending["arrived"]                       # [P, D]
+        cvec = tm.tree_pack(state.caches, lead_ndim=1,
+                            pad_to=dispatch.PACK_ALIGN)          # [P, D] fp32
+        flat = dispatch.stale_accum(cvec.reshape(-1),
+                                    arrived.reshape(1, -1),
+                                    jnp.ones((1,), jnp.float32))
+        caches = tm.tree_unpack(flat.reshape(p, -1), pspec)
+
+        # 2. compute (identical to the tree path).
+        worker_keys = jax.random.split(kupd, p)
+        updates, update_state, metrics = jax.vmap(update_fn)(
+            caches, state.update_state, batches, worker_keys)
+
+        # 3. dispatch: zero the consumed slot, scatter-add each src's
+        #    packed update row into (dst, (t + 1 + r) mod B), then prefetch
+        #    the NEXT step's arrivals. The prefetch reads the ring after
+        #    every write (a true dependency), so the donated ring mutates
+        #    strictly in place.
+        delays = source.delays(kdelay, state.step, (p, p))
+        if bound is not None:
+            delays = jnp.minimum(delays, jnp.asarray(bound, jnp.int32))
+        uvec = tm.tree_pack(updates, lead_ndim=1,
+                            pad_to=dispatch.PACK_ALIGN)          # [P, D]
+        cursor = jnp.mod(state.step, slots)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, jnp.zeros_like(arrived)[:, None], cursor, axis=1)
+        slot = jnp.mod(state.step + 1 + delays, slots)           # [src, dst]
+        dst = jnp.broadcast_to(jnp.arange(p)[None, :], (p, p))
+        ring = ring.at[dst, slot].add(
+            jnp.broadcast_to(uvec[:, None, :], (p, p) + uvec.shape[-1:])
+            .astype(ring.dtype))
+        arrived_next = jax.lax.dynamic_index_in_dim(
+            ring, jnp.mod(state.step + 1, slots), axis=1, keepdims=False)
+
+        new_state = SimState(
+            caches=caches,
+            pending={"ring": ring, "arrived": arrived_next},
+            update_state=update_state, server_state=state.server_state,
+            step=state.step + 1, key=key)
+        return new_state, metrics
 
     def step(state: SimState, batches: Pytree,
              bound: Optional[jax.Array] = None) -> Tuple[SimState, dict]:
@@ -163,13 +269,13 @@ def make_sim_step(
             caches, state.update_state, batches, worker_keys
         )
 
-        # 3. dispatch into the delivery buffer with sampled delays.
-        delays = draw_delay_matrix(kdelay, cfg.delay, cfg.num_workers)
+        # 3. dispatch into the delivery buffer with the realized delays.
+        delays = source.delays(kdelay, state.step, (p, p))
         if bound is not None:
             # Dynamic staleness control (repro.engine): clamp the sampled
             # delay to an (inclusive, possibly traced) runtime bound.
             delays = jnp.minimum(delays, jnp.asarray(bound, jnp.int32))
-        pending = _dispatch(pending, updates, delays, cfg.buffer_slots)
+        pending = _dispatch(pending, updates, delays, slots)
 
         new_state = SimState(
             caches=caches,
@@ -181,7 +287,7 @@ def make_sim_step(
         )
         return new_state, metrics
 
-    return step
+    return packed_step if cfg.kernels else step
 
 
 def drain(state: SimState, server_apply: Optional[ServerApply] = None,
@@ -189,8 +295,32 @@ def drain(state: SimState, server_apply: Optional[ServerApply] = None,
     """Deliver every in-flight update without generating new ones.
 
     Used by the conservation property test: after draining, every cache equals
-    ``x0 + sum of all generated updates`` (all caches identical).
+    ``x0 + sum of all generated updates`` (all caches identical). Handles both
+    the tree and the packed pending layouts.
     """
+    if _is_packed(state):
+        ring = state.pending["ring"]
+        slots = ring.shape[1]
+        pspec = tm.pack_spec(state.caches, lead_ndim=1)
+        caches = state.caches
+
+        def add(caches, row):
+            delivered = tm.tree_unpack(row, pspec)
+            return jax.tree.map(lambda c, d: c + d.astype(c.dtype),
+                                caches, delivered)
+
+        # The prefetched row IS ring slot (step mod B); the remaining
+        # in-flight updates sit at the following B-1 cursor positions.
+        caches = add(caches, state.pending["arrived"])
+        for i in range(1, slots):
+            row = jax.lax.dynamic_index_in_dim(
+                ring, jnp.mod(state.step + i, slots), axis=1, keepdims=False)
+            caches = add(caches, row)
+        return dataclasses.replace(
+            state, caches=caches,
+            pending={"ring": jnp.zeros_like(ring),
+                     "arrived": jnp.zeros_like(state.pending["arrived"])})
+
     slots = jax.tree.leaves(state.pending)[0].shape[1]
     caches, pending, server_state = state.caches, state.pending, state.server_state
     for _ in range(slots):

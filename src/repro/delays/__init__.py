@@ -1,0 +1,48 @@
+"""repro.delays — one delay subsystem for every engine mode.
+
+The paper's central knob — *how* updates get delayed — lives here as one
+protocol: a :class:`DelaySpec` realizes to a per-step :class:`DelaySource`
+(``delays(key, step, shape)``) with an explicit ``bound`` that sizes the
+delivery ring. ``EngineConfig(delay=spec)`` is honored uniformly by all four
+engine modes.
+
+    from repro import delays
+
+    delays.Uniform(s)                 # the paper's Categorical(0..s-1)
+    delays.Geometric(...)             # Appendix-A.3 straggler mix
+    delays.Constant(d), delays.Zero()
+    delays.Schedule(table)            # deterministic [T, P] / [T] tables
+    delays.Trace(path, bound=s)       # measured wall-times -> SSP clocks
+    delays.MultiPod(pod_of, intra=..., inter=...)   # topology composition
+
+Legacy names (``UniformDelay`` etc., ``repro.core.delay``) stay importable
+and bitwise-identical; see docs/API.md for the migration note.
+"""
+from repro.delays.models import (
+    ConstantDelay,
+    DelayModel,
+    DelaySource,
+    DelaySpec,
+    GeometricDelay,
+    UniformDelay,
+    Zero,
+    as_spec,
+    matched_geometric,
+)
+from repro.delays.multipod import MultiPod, pods_of
+from repro.delays.parse import parse_spec
+from repro.delays.schedule import Schedule, TableSource
+from repro.delays.trace import Trace, read_trace, record_trace
+
+# Short canonical names (the legacy *Delay spellings remain aliases).
+Uniform = UniformDelay
+Constant = ConstantDelay
+Geometric = GeometricDelay
+
+__all__ = [
+    "ConstantDelay", "Constant", "DelayModel", "DelaySource", "DelaySpec",
+    "GeometricDelay", "Geometric", "MultiPod", "Schedule", "TableSource",
+    "Trace", "Uniform", "UniformDelay", "Zero", "as_spec",
+    "matched_geometric", "parse_spec", "pods_of", "read_trace",
+    "record_trace",
+]

@@ -1,0 +1,56 @@
+"""CLI delay-spec grammar shared by ``launch/train.py`` and
+``launch/dryrun.py`` (``--delay``).
+
+    uniform[:S]                     r ~ Categorical(0..S-1)   (default S = s)
+    zero                            always 0 (sync limit)
+    constant:D                      every delay == D
+    geometric[:TRUNC]               Appendix-A.3 straggler mix matched to s
+    multipod:PODS[:INTER_S[:INTRA_S]]
+                                    hierarchical intra/inter-pod composition
+                                    (defaults: inter uniform(s), intra zero)
+    trace:PATH[:BOUND]              replay measured wall-times (SSP clocks)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.delays.models import (ConstantDelay, DelaySpec, UniformDelay, Zero,
+                                 matched_geometric)
+from repro.delays.multipod import MultiPod, pods_of
+from repro.delays.trace import Trace
+
+
+def parse_spec(text: str, s: int = 0, num_workers: int = 1) -> DelaySpec:
+    """Parse a ``--delay`` CLI string; ``s`` and ``num_workers`` supply the
+    defaults the grammar leaves implicit (see module docstring)."""
+    kind, _, rest = text.strip().partition(":")
+    args = rest.split(":") if rest else []
+    try:
+        if kind == "uniform":
+            return UniformDelay(int(args[0]) if args else s)
+        if kind == "zero":
+            return Zero()
+        if kind == "constant":
+            return ConstantDelay(int(args[0]))
+        if kind == "geometric":
+            trunc = int(args[0]) if args else max(s - 1, 1)
+            return matched_geometric(s, num_workers, trunc=trunc)
+        if kind == "multipod":
+            pods = int(args[0])
+            inter_s = int(args[1]) if len(args) > 1 else s
+            intra_s = int(args[2]) if len(args) > 2 else 0
+            return MultiPod(pod_of=pods_of(num_workers, pods),
+                            intra=UniformDelay(intra_s) if intra_s else Zero(),
+                            inter=UniformDelay(inter_s))
+        if kind == "trace":
+            if not args or not args[0]:
+                raise ValueError("trace needs a path: trace:PATH[:BOUND]")
+            bound: Optional[int] = int(args[1]) if len(args) > 1 else (
+                s if s else None)
+            return Trace(args[0], bound=bound)
+    except (IndexError, ValueError) as e:
+        raise ValueError(f"bad delay spec {text!r}: {e}") from e
+    raise ValueError(
+        f"unknown delay spec {text!r}; grammar: uniform[:S] | zero | "
+        "constant:D | geometric[:TRUNC] | multipod:PODS[:INTER_S[:INTRA_S]] "
+        "| trace:PATH[:BOUND]")

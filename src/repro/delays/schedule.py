@@ -1,0 +1,114 @@
+"""Deterministic per-step delay tables (absorbs the old
+``StaleSyncConfig(delay_table=...)`` escape hatch and the materialized form
+of ``ssp_delay_schedule``).
+
+A :class:`Schedule` holds an int delay table indexed by ``step mod T``:
+
+* ``[T, P]`` — one delay per (step, worker); the stale-psum / ssp engines
+  read row ``t`` as the per-worker gradient ages, the simulate engine
+  broadcasts row ``t`` over destinations (``r[src, dst] = table[t, src]`` —
+  a worker's *outgoing* updates share its delay, matching the
+  source-straggler semantics of Appendix A.3).
+* ``[T]`` — one delay per step: the Theorem-1 aggregate form
+  (``per_worker_delays=False``), or broadcast to all workers otherwise.
+
+Tables wrap when the run outlives them (``step mod T``), exactly like the
+legacy ``delay_table``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.delays.models import DelaySource, DelaySpec
+
+
+class TableSource(DelaySource):
+    """Realized schedule: indexes the table by ``step mod T``."""
+
+    def __init__(self, table: jax.Array, bound: int):
+        self.table = table
+        self._bound = int(bound)
+
+    @property
+    def bound(self) -> int:
+        return self._bound
+
+    def delays(self, key, step, shape):
+        t_steps = self.table.shape[0]
+        row = self.table[jnp.mod(jnp.asarray(step, jnp.int32), t_steps)]
+        if len(shape) == 0:
+            if self.table.ndim != 1:
+                raise ValueError(
+                    "aggregate (scalar) delays need a [T] schedule table; "
+                    f"got shape {tuple(self.table.shape)} — use "
+                    "per_worker_delays=True for [T, P] tables")
+            return row
+        if self.table.ndim == 1:
+            row = jnp.broadcast_to(row, shape[:1])
+        elif row.shape[0] != shape[0]:
+            raise ValueError(
+                f"schedule table has {row.shape[0]} workers, engine asked "
+                f"for {shape[0]}")
+        if len(shape) == 1:
+            return row
+        if len(shape) == 2:
+            # simulate-mode [src, dst] matrix: source-worker rows broadcast
+            # over destinations.
+            return jnp.broadcast_to(row[:, None], shape)
+        raise ValueError(f"unsupported delay shape {shape}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule(DelaySpec):
+    """Deterministic delay schedule (see module docstring).
+
+    ``table`` may be a numpy/list table (canonicalized to int32) or an
+    already device-placed ``jax.Array`` — the latter is kept as-is so the
+    sharding planner can pre-place ``[T, P]`` tables over the worker axis
+    (``repro.engine.plan.place_delay_table``).
+    """
+
+    table: Any
+
+    def __post_init__(self):
+        t = self.table
+        if isinstance(t, jax.Array):
+            stats = np.asarray(t)
+        else:
+            t = np.asarray(t, np.int32)
+            stats = t
+        if stats.ndim not in (1, 2) or stats.size == 0:
+            raise ValueError(
+                f"Schedule table must be a non-empty [T] or [T, P] array, "
+                f"got shape {stats.shape}")
+        if stats.min() < 0:
+            raise ValueError("Schedule table has negative delays")
+        object.__setattr__(self, "table", t)
+        object.__setattr__(self, "_bound", int(stats.max()))
+        object.__setattr__(self, "_mean", float(stats.mean()))
+
+    @property
+    def bound(self) -> int:
+        return self._bound
+
+    @property
+    def mean_total_delay(self) -> float:
+        return 1.0 + self._mean
+
+    @property
+    def num_workers(self) -> Optional[int]:
+        shape = tuple(np.shape(self.table))
+        return shape[1] if len(shape) == 2 else None
+
+    def realize(self, key=None, t_steps=None, num_workers=None) -> TableSource:
+        if (num_workers is not None and self.num_workers is not None
+                and self.num_workers != num_workers):
+            raise ValueError(
+                f"Schedule table is for {self.num_workers} workers, engine "
+                f"has {num_workers}")
+        return TableSource(jnp.asarray(self.table, jnp.int32), self.bound)

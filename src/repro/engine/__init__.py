@@ -22,6 +22,7 @@ from repro.engine.hooks import (
     CoherenceHook,
     JSONLinesSink,
     StdoutSink,
+    TraceRecorderHook,
 )
 from repro.engine.plan import (
     Plan,

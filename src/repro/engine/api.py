@@ -37,9 +37,10 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import delays as delays_lib
 from repro.core import ssp as ssp_lib
 from repro.core import stale_sync, staleness
-from repro.core.delay import DelayModel, UniformDelay
+from repro.delays.models import DelaySpec, UniformDelay
 from repro.optim import optimizers as optlib
 
 Pytree = Any
@@ -59,7 +60,13 @@ class EngineConfig:
     mode: str = "sync"
     num_workers: int = 1
     s: int = 0
-    delay: Optional[DelayModel] = None   # overrides UniformDelay(s)
+    # Any repro.delays spec, honored uniformly by every mode: samplers
+    # (Uniform/Geometric/Constant/Zero) and MultiPod for the sampled modes,
+    # Schedule/Trace (deterministic tables, measured wall-time replays) for
+    # any per-worker mode including ssp; a raw [T, P] / [T] array coerces to
+    # a Schedule. None = UniformDelay(s) (sampled modes) / the lognormal
+    # speed model (ssp). sync is delay-free and accepts only bound-0 specs.
+    delay: Optional[DelaySpec] = None
     # Kernel-backed hot path (repro.kernels.dispatch): "off" keeps the
     # legacy per-leaf tree math (bitwise legacy trajectories); "auto" routes
     # the ring-buffer delivery through the packed fused kernels where the
@@ -94,11 +101,25 @@ class EngineConfig:
         if self.kernels not in ("off", "auto", "on"):
             raise ValueError(f"kernels must be 'off'|'auto'|'on', "
                              f"got {self.kernels!r}")
-        if self.delay is not None and self.mode in ("ssp", "sync"):
-            raise ValueError(
-                f"delay= is not used by mode={self.mode!r} (ssp derives "
-                "delays from the clock schedule; sync has none) — "
-                "misconfiguration rejected rather than silently ignored")
+        object.__setattr__(self, "delay", delays_lib.as_spec(self.delay))
+        if self.delay is not None:
+            if self.mode == "sync" and getattr(self.delay, "bound", None) != 0:
+                raise ValueError(
+                    "sync mode is delay-free: only a bound-0 spec "
+                    "(delays.Zero()) is accepted — misconfiguration "
+                    "rejected rather than silently ignored")
+            if self.mode == "ssp" and not isinstance(
+                    self.delay, (delays_lib.Schedule, delays_lib.Trace)):
+                raise ValueError(
+                    "ssp derives its delays from a clock schedule: pass "
+                    "delays.Trace(...) (measured wall-times), "
+                    "delays.Schedule(...) (explicit table), or delay=None "
+                    "for the lognormal speed model")
+            if (isinstance(self.delay, delays_lib.Trace)
+                    and self.delay.bound is None and self.mode != "ssp"):
+                raise ValueError(
+                    "Trace needs an explicit bound= outside mode='ssp' "
+                    "(it sizes the delivery ring)")
 
 
 @jax.tree_util.register_dataclass
@@ -251,6 +272,15 @@ def kernel_placement_ok(kernels: str, arch=None, mesh=None) -> Tuple[bool, str]:
     return True, ""
 
 
+def _place_table(table, mesh):
+    """Worker-shard a [T, P] delay table on mesh-aware engines (the table is
+    closed over by the step, so it must be placed before tracing)."""
+    if mesh is None:
+        return table
+    from repro.engine import plan as plan_lib  # lazy: plan imports us
+    return plan_lib.place_delay_table(table, mesh)
+
+
 def _mean_over_workers(metrics: dict) -> dict:
     """simulate-mode update_fns report per-worker metric rows [P, ...];
     reduce to scalars so all modes emit a uniform metrics dict."""
@@ -292,27 +322,38 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
     meta = {"mode": mode, "workers": cfg.num_workers, "s": cfg.s}
 
     # Kernel routing verdict for the ring-buffer delivery (the stale_accum
-    # hot spot). FSDP archs shard the buffer's param dims over 'data'; a
-    # packed [slots(, P), D] buffer cannot keep that placement, so "auto"
-    # falls back to tree math there and "on" refuses.
+    # hot spot): the gradient ring (stale-psum / ssp) AND the simulate-mode
+    # pending ring route through the same packed path under the same
+    # placement gate. FSDP archs shard buffer param dims over 'data'; a
+    # packed [.., D] buffer cannot keep that placement, so "auto" falls back
+    # to tree math there and "on" refuses. simulate's server_side transform
+    # consumes per-leaf arrivals, so it stays on tree math too.
     kernel_delivery, why = False, ""
-    if cfg.kernels != "off" and mode in ("stale-psum", "ssp"):
-        kernel_delivery, why = kernel_placement_ok(cfg.kernels, arch, mesh)
-        if not kernel_delivery and cfg.kernels == "on":
-            arch_id = getattr(arch, "arch_id", arch)
-            raise ValueError(
-                f"kernels='on' is unsupported for FSDP arch {arch_id!r}: "
-                "the packed ring buffer cannot keep the 'embed'->data "
-                "placement; use kernels='auto' (falls back to tree math)")
-    if mode in ("stale-psum", "ssp"):
+    if cfg.kernels != "off" and mode in ("stale-psum", "ssp", "simulate"):
+        if mode == "simulate" and cfg.server_side:
+            why = "server_side transform"
+            if cfg.kernels == "on":
+                raise ValueError(
+                    "kernels='on' is unsupported with server_side=True: the "
+                    "server transform consumes per-leaf arrivals; use "
+                    "kernels='auto' (falls back to tree math)")
+        else:
+            kernel_delivery, why = kernel_placement_ok(cfg.kernels, arch, mesh)
+            if not kernel_delivery and cfg.kernels == "on":
+                arch_id = getattr(arch, "arch_id", arch)
+                raise ValueError(
+                    f"kernels='on' is unsupported for FSDP arch {arch_id!r}: "
+                    "the packed ring buffer cannot keep the 'embed'->data "
+                    "placement; use kernels='auto' (falls back to tree math)")
+    if mode in ("stale-psum", "ssp", "simulate"):
         delivery = "packed" if kernel_delivery else "tree"
-    elif mode == "simulate":
-        delivery = "tree"   # simulate's [P, B, ...] dispatch is not routed
     else:
         delivery = "none"   # sync is buffer-free
     meta["kernels"] = {"config": cfg.kernels, "delivery": delivery}
     if why:
         meta["kernels"]["fallback"] = why
+    if cfg.delay is not None:
+        meta["delay_spec"] = repr(cfg.delay)
 
     def _finish(engine: Engine) -> Engine:
         if mesh is not None and shape is not None:
@@ -333,7 +374,8 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
         sim_cfg = staleness.StalenessConfig(
             num_workers=cfg.num_workers,
             delay=cfg.delay or UniformDelay(cfg.s),
-            server_side=cfg.server_side)
+            server_side=cfg.server_side,
+            kernels=kernel_delivery)
         raw = staleness.make_sim_step(update_fn, sim_cfg,
                                       server_apply=server_apply)
 
@@ -371,14 +413,32 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
     if loss is None or optimizer is None:
         raise ValueError(f"{mode} mode needs (loss, optimizer)")
     if mode == "ssp":
-        speeds = cfg.ssp_speeds
-        if speeds is None:
-            speeds = ssp_lib.sample_worker_durations(
-                jax.random.PRNGKey(cfg.ssp_seed), cfg.ssp_steps,
-                cfg.num_workers, cfg.ssp_mean_dur, cfg.ssp_cv)
-        table = ssp_lib.ssp_delay_schedule(
-            ssp_lib.SSPConfig(num_workers=cfg.num_workers, bound=cfg.s),
-            jnp.asarray(speeds))
+        if cfg.delay is not None:
+            # Trace/Schedule specs replace the sampled lognormal speed model
+            # (type-validated in EngineConfig.__post_init__): measured
+            # wall-times run through the same clock discipline.
+            spec = cfg.delay
+            if isinstance(spec, delays_lib.Trace):
+                spec = spec.schedule(
+                    num_workers=cfg.num_workers,
+                    bound=spec.bound if spec.bound is not None else cfg.s)
+            else:
+                spec.realize(num_workers=cfg.num_workers)  # width check
+            if spec.bound > cfg.s:
+                raise ValueError(
+                    f"delay schedule bound {spec.bound} exceeds the ssp "
+                    f"clock bound s={cfg.s}; raise s to at least {spec.bound}")
+            table = jnp.asarray(spec.table, jnp.int32)
+        else:
+            speeds = cfg.ssp_speeds
+            if speeds is None:
+                speeds = ssp_lib.sample_worker_durations(
+                    jax.random.PRNGKey(cfg.ssp_seed), cfg.ssp_steps,
+                    cfg.num_workers, cfg.ssp_mean_dur, cfg.ssp_cv)
+            table = ssp_lib.ssp_delay_schedule(
+                ssp_lib.SSPConfig(num_workers=cfg.num_workers, bound=cfg.s),
+                jnp.asarray(speeds))
+        table = _place_table(table, mesh)
         # schedule delays reach cfg.s, so the ring needs s+1 slots.
         scfg = stale_sync.StaleSyncConfig(
             num_workers=cfg.num_workers, s=cfg.s + 1,
@@ -387,19 +447,37 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
         meta["ssp_schedule"] = table
         max_bound = cfg.s
     else:
+        spec = cfg.delay
+        if isinstance(spec, delays_lib.Trace):
+            # bound is non-None here (EngineConfig validates it).
+            spec = spec.schedule(num_workers=cfg.num_workers)
+        if (isinstance(spec, delays_lib.MultiPod)
+                and not cfg.per_worker_delays):
+            raise ValueError(
+                "MultiPod delays are per-worker; the Theorem-1 aggregate "
+                "form (per_worker_delays=False) cannot express topology")
+        table = None
+        if isinstance(spec, delays_lib.Schedule) and cfg.per_worker_delays:
+            # Deterministic tables ride the delay_table fast path so the
+            # planner can pre-place [T, P] tables over the worker axis.
+            spec.realize(num_workers=cfg.num_workers)  # width check
+            table = _place_table(jnp.asarray(spec.table, jnp.int32), mesh)
         scfg = stale_sync.StaleSyncConfig(
-            num_workers=cfg.num_workers, s=cfg.s, delay=cfg.delay,
+            num_workers=cfg.num_workers, s=cfg.s,
+            delay=None if table is not None else spec,
+            delay_table=table,
             buffer_dtype=cfg.buffer_dtype,
             per_worker_delays=cfg.per_worker_delays,
             kernels=kernel_delivery)
-        if scfg.delay.bound > scfg.slots - 1:
+        eff_bound = spec.bound if spec is not None else scfg.delay.bound
+        if eff_bound > scfg.slots - 1:
             # A delay the ring can't hold would silently wrap onto a much
             # fresher slot while metrics report the large staleness.
             raise ValueError(
-                f"delay bound {scfg.delay.bound} exceeds the gradient ring "
+                f"delay bound {eff_bound} exceeds the gradient ring "
                 f"({scfg.slots} slots from s={cfg.s}); raise s to at least "
-                f"{scfg.delay.bound + 1}")
-        max_bound = scfg.delay.bound
+                f"{eff_bound + 1}")
+        max_bound = eff_bound
     raw = stale_sync.make_stale_train_step(loss, optimizer, scfg)
     return _finish(Engine(
         cfg=cfg, mesh=mesh, meta=meta,

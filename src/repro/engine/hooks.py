@@ -11,6 +11,7 @@ import functools
 import json
 import os
 import sys
+import time
 from typing import Any, Optional
 
 import jax
@@ -20,6 +21,41 @@ from repro.core import coherence as coh
 from repro.engine.trainer import Hook, StepContext, TrainResult
 
 Pytree = Any
+
+
+class TraceRecorderHook(Hook):
+    """Record measured per-step wall-times to a ``repro.delays`` trace file.
+
+    Every engine step's wall-clock duration is recorded for each worker (the
+    single-process Trainer steps all workers in lockstep, so rows are
+    uniform; per-worker profiles from real pods use
+    :func:`repro.delays.record_trace` directly). The file is written on
+    ``on_end`` and replays through ``delays.Trace(path, bound=s)`` — the
+    ROADMAP's hardware-faithful SSP schedules.
+    """
+
+    def __init__(self, path: str, num_workers: Optional[int] = None):
+        self.path = path
+        self.num_workers = num_workers
+        self._rows: list = []
+        self._t = None
+
+    def on_start(self, ctx: StepContext) -> None:
+        self._t = time.perf_counter()
+
+    def on_step(self, ctx: StepContext) -> None:
+        now = time.perf_counter()
+        if self._t is not None:
+            p = self.num_workers or ctx.engine.cfg.num_workers
+            self._rows.append([now - self._t] * p)
+        self._t = now
+
+    def on_end(self, ctx: StepContext, result: TrainResult) -> None:
+        from repro.delays import record_trace
+        if self._rows:
+            record_trace(self.path, self._rows,
+                         meta={"mode": ctx.engine.cfg.mode,
+                               "steps": len(self._rows)})
 
 
 class CoherenceHook(Hook):

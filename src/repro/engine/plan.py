@@ -147,6 +147,20 @@ def _lead(mesh, wax, *rest):
     return NamedSharding(mesh, PS(wax, *rest))
 
 
+def place_delay_table(table, mesh):
+    """Place a deterministic delay table for a mesh-aware engine: [T, P]
+    tables shard their worker axis over ("pod","data") — each worker holds
+    only its own delay column, like every other per-worker buffer. [T]
+    tables (and worker counts that don't divide the data extent) replicate,
+    mirroring the planner's even-division fallback."""
+    arr = jnp.asarray(table, jnp.int32)
+    wax = rules_lib.worker_axes(mesh)
+    if (arr.ndim < 2 or wax is None
+            or arr.shape[1] % rules_lib.data_extent(mesh)):
+        return jax.device_put(arr, _replicated(mesh))
+    return jax.device_put(arr, _lead(mesh, None, wax))
+
+
 # -- the train plan ---------------------------------------------------------
 
 def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
@@ -221,10 +235,18 @@ def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
         cache_sh = jax.tree.map(
             lambda a: _lead(mesh, wax, *rules_lib.spec_for(a, mesh, sim_rules)),
             params_axes, is_leaf=_is_axes_leaf)
-        pend_sh = jax.tree.map(
-            lambda a: _lead(mesh, wax, None,
-                            *rules_lib.spec_for(a, mesh, sim_rules)),
-            params_axes, is_leaf=_is_axes_leaf)
+        if engine.meta.get("kernels", {}).get("delivery") == "packed":
+            # Packed pending: ring [P, slots, D] + the prefetched arrived
+            # [P, D] row, both worker-sharded on their leading axis (the
+            # packed D axis mixes leaves, so only the worker axis can shard
+            # — the placement gate already vetoed model-sharded archs).
+            pend_sh = {"ring": _lead(mesh, wax, None, None),
+                       "arrived": _lead(mesh, wax, None)}
+        else:
+            pend_sh = jax.tree.map(
+                lambda a: _lead(mesh, wax, None,
+                                *rules_lib.spec_for(a, mesh, sim_rules)),
+                params_axes, is_leaf=_is_axes_leaf)
 
         def lead_only(x):
             return _lead(mesh, wax, *([None] * (x.ndim - 1)))
@@ -257,10 +279,15 @@ def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
     # Donate the state where aliasing actually elides work: the ring-buffer
     # modes carry a [slots(, P), ...] gbuf of which ONE slot changes per
     # step — undonated, XLA materialises the whole ring afresh every step.
-    # sync rewrites params/moments wholesale and simulate ROLLS its pending
-    # ring (every element rewritten), so there donation elides nothing and
-    # jax's per-call donated-buffer bookkeeping is pure overhead — skipped.
-    donate = cfg.donate and cfg.mode in ("stale-psum", "ssp")
+    # sync rewrites params/moments wholesale and tree-mode simulate ROLLS
+    # its pending ring (every element rewritten), so there donation elides
+    # nothing and jax's per-call donated-buffer bookkeeping is pure overhead
+    # — skipped. PACKED simulate addresses its [P, slots, D] ring with a
+    # rotating cursor (one slot zeroed + scatter-add per step, no roll), so
+    # it donates like the gradient-ring modes.
+    packed = engine.meta.get("kernels", {}).get("delivery") == "packed"
+    donate = cfg.donate and (cfg.mode in ("stale-psum", "ssp")
+                             or (cfg.mode == "simulate" and packed))
     plan = Plan(
         fn=engine._wrap,
         args=(state_struct, batch_struct),

@@ -94,6 +94,7 @@ class Trainer:
         history: List[dict] = []
         curve: list = []
         batches_to_target, converged = None, False
+        stale_sum, stale_n = 0.0, 0   # realized-delay running mean (log rows)
         for t in range(steps):
             try:
                 batch = next_batch()
@@ -110,7 +111,15 @@ class Trainer:
                 if "loss" in metrics:
                     ctx.row["loss"] = float(metrics["loss"])
                 if "mean_staleness" in metrics:
-                    ctx.row["mean_staleness"] = float(metrics["mean_staleness"])
+                    ms = float(metrics["mean_staleness"])
+                    ctx.row["mean_staleness"] = ms
+                    # Realized mean TOTAL delay (1 + r), cumulative over the
+                    # logged steps — sweeps verify a delay spec's effective
+                    # staleness against its nominal spec.mean_total_delay.
+                    stale_sum += ms
+                    stale_n += 1
+                    ctx.row["mean_total_delay"] = round(
+                        1.0 + stale_sum / stale_n, 4)
                 if engine._max_bound:
                     # live dynamic staleness bound (coherence-controller lever)
                     ctx.row["bound"] = int(jax.device_get(ctx.state.bound))

@@ -53,7 +53,8 @@ def active_params(arch_id: str) -> int:
 
 def run_one(arch_id: str, shape_name: str, multi_pod: bool,
             stale_s=None, remat=None, optimizer=None,
-            overrides=None, tag="", mode=None, kernels="off") -> dict:
+            overrides=None, tag="", mode=None, kernels="off",
+            delay=None) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = math.prod(mesh.devices.shape)
     shape = SHAPES[shape_name]
@@ -63,6 +64,15 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
         kw.update({"stale_s": stale_s, "remat_override": remat,
                    "optimizer_name": optimizer, "mode": mode,
                    "kernels": kernels})
+        if delay:
+            # --delay specs (repro.delays) lower through the same planned
+            # engine: the ring is sized from spec.bound, [T, P] tables are
+            # worker-sharded, multipod pods map onto the data extent.
+            from repro.delays import parse_spec
+            from repro.sharding.rules import data_extent
+            kw["delay"] = parse_spec(delay, s=stale_s or 0,
+                                     num_workers=data_extent(mesh))
+            tag = tag or f"delay={delay}"
     built = planlib.build(arch_id, shape_name, mesh, **kw)
 
     t0 = time.time()
@@ -155,6 +165,9 @@ def main():
                     choices=["off", "auto", "on"],
                     help="lower the kernel-backed (packed ring + fused "
                          "delivery/Adam, donated state) train step")
+    ap.add_argument("--delay", default=None,
+                    help="delay spec for train steps (repro.delays grammar, "
+                         "e.g. multipod:2, geometric, trace:PATH:BOUND)")
     ap.add_argument("--out", default=OUT_DEFAULT)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -174,16 +187,24 @@ def main():
                     # Resolve the staleness bound HERE so the dedupe key
                     # matches the key the plan meta will report (the planner
                     # falls back to arch.stale_s_default for explicit
-                    # non-sync modes) — dryrun.jsonl stays idempotent.
+                    # non-sync modes; --delay specs need a ring, so they
+                    # imply a stale train step too) — dryrun.jsonl stays
+                    # idempotent.
                     stale = args.stale
                     if (stale is None
-                            and args.mode not in (None, "auto", "sync")
+                            and (args.mode not in (None, "auto", "sync")
+                                 or args.delay)
                             and SHAPES[shape_name].kind == "train"):
                         stale = cfglib.get(arch_id).stale_s_default
                     mode = planlib.mode_label(SHAPES[shape_name].kind,
                                               args.mode, stale)
+                    # --delay only affects (and only tags) train steps, so
+                    # the dedupe key carries it for train shapes alone.
                     key = (f"{arch_id}|{shape_name}|{'multipod' if mp else 'pod'}"
-                           f"|{mode}")
+                           f"|{mode}"
+                           + (f"|delay={args.delay}"
+                              if args.delay
+                              and SHAPES[shape_name].kind == "train" else ""))
                     if key in done:
                         print(f"-- skip (done): {key}")
                         continue
@@ -191,7 +212,7 @@ def main():
                         rec = run_one(arch_id, shape_name, mp,
                                       stale_s=stale, remat=args.remat,
                                       optimizer=args.optimizer, mode=args.mode,
-                                      kernels=args.kernels)
+                                      kernels=args.kernels, delay=args.delay)
                     except Exception as e:  # noqa: BLE001
                         traceback.print_exc()
                         rec = {"key": key, "arch": arch_id, "shape": shape_name,

@@ -26,12 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
+from repro import delays as delays_lib
 from repro import treemath as tm
 from repro.configs.base import InputShape
 from repro.core import coherence as coh
 from repro.data.synthetic import token_lm_stream
 from repro.engine import (CheckpointHook, CoherenceHook, EngineConfig,
-                          StdoutSink, Trainer, build_engine)
+                          StdoutSink, TraceRecorderHook, Trainer,
+                          build_engine)
 from repro.launch import mesh as meshlib
 from repro.optim import optimizers as optlib
 
@@ -76,6 +78,17 @@ def main():
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "sync", "stale-psum", "ssp", "simulate"],
                     help="staleness regime (auto: sync iff --stale 0)")
+    ap.add_argument("--delay", default=None,
+                    help="delay spec (repro.delays): uniform[:S] | zero | "
+                         "constant:D | geometric[:TRUNC] | "
+                         "multipod:PODS[:INTER_S[:INTRA_S]] | "
+                         "trace:PATH[:BOUND]")
+    ap.add_argument("--trace", default=None,
+                    help="replay measured per-step wall-times from a delays "
+                         "trace file (shorthand for --delay trace:PATH)")
+    ap.add_argument("--trace-out", default=None,
+                    help="record this run's per-step wall-times to a trace "
+                         "file for later --trace replay")
     ap.add_argument("--optimizer", default=None)
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--kernels", default="off",
@@ -96,9 +109,23 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
+    if args.delay and args.trace:
+        raise SystemExit("--delay and --trace are mutually exclusive "
+                         "(--trace is shorthand for --delay trace:PATH)")
     mode = args.mode
     if mode == "auto":
         mode = "sync" if args.stale == 0 else "stale-psum"
+    delay_spec = None
+    if args.trace:
+        # bound == --stale even at 0 (a BSP replay), so the spec is always
+        # fully resolved — the end-of-run nominal print needs it.
+        delay_spec = delays_lib.Trace(args.trace, bound=args.stale)
+    elif args.delay:
+        delay_spec = delays_lib.parse_spec(args.delay, s=args.stale,
+                                           num_workers=args.workers)
+    if delay_spec is not None and mode == "sync":
+        raise SystemExit(f"--delay/--trace need a non-sync mode: pass "
+                         f"--stale > 0 or --mode (got mode={mode})")
     arch = cfglib.get(args.arch)
     api = arch.api(reduced=args.reduced)
     print(f"arch={args.arch} reduced={args.reduced} family={api.family} "
@@ -115,7 +142,7 @@ def main():
     opt = optlib.get_optimizer(opt_name, **opt_kwargs)
     shape = InputShape(f"train_cli_{args.seq}", args.seq, args.batch, "train")
     ecfg = EngineConfig(mode=mode, num_workers=args.workers, s=args.stale,
-                        kernels=args.kernels,
+                        delay=delay_spec, kernels=args.kernels,
                         ssp_steps=max(args.steps, 1), ssp_seed=args.seed)
     engine = build_engine(api, opt, ecfg, mesh=mesh, arch=arch, shape=shape)
     state = engine.init(jax.random.PRNGKey(args.seed))
@@ -138,10 +165,19 @@ def main():
     if args.ckpt_every and args.ckpt_dir:
         hooks.append(CheckpointHook(args.ckpt_dir, args.ckpt_every,
                                     extra={"arch": args.arch}))
+    if args.trace_out:
+        hooks.append(TraceRecorderHook(args.trace_out,
+                                       num_workers=args.workers))
     hooks.append(StdoutSink())  # sinks last: they see hook-merged rows
 
     result = Trainer(engine, hooks=hooks).run(
         next_batch, args.steps, state=state, log_every=args.log_every)
+
+    if delay_spec is not None and result.history:
+        realized = result.history[-1].get("mean_total_delay")
+        if realized is not None:
+            print(f"delay: realized mean total delay {realized:.3f} "
+                  f"(nominal {delay_spec.mean_total_delay:.3f})")
 
     if args.kernels != "off":
         rep = engine.dispatch_report()

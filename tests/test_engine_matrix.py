@@ -23,6 +23,7 @@ import numpy as np
 import pytest
 
 from repro import configs as cfglib
+from repro import delays
 from repro.configs.base import InputShape
 from repro.core import stale_sync
 from repro.engine import plan as planlib
@@ -50,10 +51,14 @@ def make_batch(spec, key):
     return out
 
 
-def make_engine(arch_id, mode, mesh, kernels="off"):
+def make_engine(arch_id, mode, mesh, kernels="off", **kw):
     return planlib.make_train_engine(
         arch_id, SHAPE, mesh, mode=mode, stale_s=2, num_workers=2,
-        reduced=True, ssp_steps=8, kernels=kernels)
+        reduced=True, ssp_steps=8, kernels=kernels, **kw)
+
+
+MULTIPOD = delays.MultiPod(pod_of=(0, 1), intra=delays.Zero(),
+                           inter=delays.Uniform(2))
 
 
 def run_combo(engine, steps=2, seed=0):
@@ -122,16 +127,85 @@ def test_engine_plan_matches_legacy_steps_path():
     check_legacy_equivalence(meshlib.make_host_mesh(1, 1))
 
 
+@pytest.mark.parametrize("legacy_kw", [
+    {"delay": delays.UniformDelay(2)},
+    {"delay": delays.GeometricDelay(p_normal=0.5, trunc=2)},
+    {"delay_table": np.array([[0, 1], [2, 0], [1, 2], [0, 0]], np.int32)},
+], ids=["delay=uniform", "delay=geometric", "delay_table"])
+def test_engine_delay_spec_matches_legacy_stale_sync(legacy_kw):
+    """EngineConfig(delay=spec) reproduces the legacy
+    StaleSyncConfig(delay=/delay_table=) trajectories BITWISE under
+    kernels="off" — the delays refactor is a surface move, not a numerics
+    change."""
+    from repro.engine.api import EngineConfig, build_engine
+    from repro.optim import sgd
+
+    P, s = 2, 3
+    opt = sgd(0.05)
+
+    def loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    params = {"w": jnp.zeros((4,))}
+    key = jax.random.PRNGKey(0)
+    scfg = stale_sync.StaleSyncConfig(num_workers=P, s=s, **legacy_kw)
+    legacy_step = jax.jit(stale_sync.make_stale_train_step(loss, opt, scfg))
+    legacy = stale_sync.init_state(params, opt, scfg, key)
+
+    spec = legacy_kw.get("delay")
+    if spec is None:
+        spec = delays.Schedule(legacy_kw["delay_table"])
+    eng = build_engine(loss, opt, EngineConfig(
+        mode="stale-psum", num_workers=P, s=s, delay=spec))
+    st = eng.init(key, params=params)
+
+    for t in range(6):
+        kb = jax.random.fold_in(jax.random.PRNGKey(1), t)
+        x = jax.random.normal(kb, (P * 8, 4))
+        batch = (x, x @ jnp.arange(4.0))
+        legacy, lm = legacy_step(legacy, batch)
+        st, em = eng.step(st, batch)
+        np.testing.assert_array_equal(np.asarray(lm["mean_staleness"]),
+                                      np.asarray(em["mean_staleness"]))
+    np.testing.assert_array_equal(np.asarray(legacy.params["w"]),
+                                  np.asarray(st.inner.params["w"]))
+    for a, b in zip(jax.tree.leaves(legacy.gbuf),
+                    jax.tree.leaves(st.inner.gbuf)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_all_modes_accept_delay_spec():
+    """EngineConfig(delay=...) is honored uniformly: MultiPod in the
+    sampled modes, a Schedule table in ssp, Zero in sync."""
+    mesh = meshlib.make_host_mesh(1, 1)
+    table = np.array([[0, 1], [1, 0], [2, 2], [0, 1]], np.int32)
+    spec_for = {"simulate": MULTIPOD, "stale-psum": MULTIPOD,
+                "ssp": delays.Schedule(table), "sync": delays.Zero()}
+    for mode in MODES:
+        engine = make_engine("mamba2-1.3b", mode, mesh,
+                             delay=spec_for[mode])
+        state, losses = run_combo(engine)
+        assert all(np.isfinite(l) for l in losses), (mode, losses)
+        _, replay = run_combo(engine)
+        assert losses == replay, mode
+    # the schedule IS the ssp table: effective staleness matches it
+    eng = make_engine("mamba2-1.3b", "ssp", mesh,
+                      delay=delays.Schedule(table))
+    np.testing.assert_array_equal(np.asarray(eng.meta["ssp_schedule"]), table)
+
+
 @pytest.mark.parametrize("arch_id", ARCHS)
 @pytest.mark.parametrize("mode", MODES)
 def test_matrix_kernels_on_matches_off(mode, arch_id):
     """kernels="on" (packed ring + fused delivery/Adam + donated planned
     step) tracks the bitwise-legacy kernels="off" path within fp32 tolerance
-    on every mode x arch combination."""
+    on every mode x arch combination — including the simulate-mode packed
+    [P, slots, D] pending ring (PR 4)."""
     mesh = meshlib.make_host_mesh(1, 1)
     e_off = make_engine(arch_id, mode, mesh)
     e_on = make_engine(arch_id, mode, mesh, kernels="on")
-    if mode in ("stale-psum", "ssp"):
+    if mode in ("stale-psum", "ssp", "simulate"):
         assert e_on.meta["kernels"]["delivery"] == "packed"
         assert e_on.plan().donate_argnums == (0,)
     s_off, l_off = run_combo(e_off)
@@ -144,8 +218,9 @@ def test_matrix_kernels_on_matches_off(mode, arch_id):
 
 
 def test_matrix_two_device_sharded():
-    """The full matrix on a (data=2) mesh, plus the sharded legacy
-    bitwise-equivalence check, in a 2-device subprocess."""
+    """The full matrix on a (data=2) mesh, the sharded legacy
+    bitwise-equivalence check, and the MultiPod delay spec (one worker per
+    pod, pods mapped onto the data axis), in a 2-device subprocess."""
     code = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
@@ -166,6 +241,15 @@ def test_matrix_two_device_sharded():
                 _, replay = M.run_combo(engine)
                 assert losses == replay, (arch_id, mode)
         M.check_legacy_equivalence(mesh)
+        # MultiPod: hierarchical intra/inter-pod delays on the sharded mesh
+        # (both the gradient-ring and per-worker-cache substrates).
+        for mode in ("stale-psum", "simulate"):
+            engine = M.make_engine("mamba2-1.3b", mode, mesh,
+                                   delay=M.MULTIPOD)
+            state, losses = M.run_combo(engine)
+            assert all(np.isfinite(l) for l in losses), (mode, losses)
+            _, replay = M.run_combo(engine)
+            assert losses == replay, mode
         print("MATRIX2_OK")
     """)
     env = dict(os.environ)
