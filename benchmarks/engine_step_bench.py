@@ -12,6 +12,12 @@ Times one planned engine step per staleness mode in two configurations:
   packed [P, slots, D] pending ring with a rotating cursor (one slot zeroed +
   scatter-add, no roll).
 
+The stale-psum mode additionally times a ``sparse_donated`` leg — the
+fused+donated step with ``compress="topk:0.1"`` (90% target sparsity,
+repro.compensate): the EF top-k split rides the same packed views, and its
+``sparse_speedup`` (vs the dense tree baseline) must stay >= 1.0x — the
+compensation layer must not give back what the fused path bought.
+
 Writes ``experiments/BENCH_engine_step.json`` — the per-mode step trajectory
 the CI smoke tracks (the fused+donated step must not be slower on any mode).
 """
@@ -40,6 +46,12 @@ VARIANTS = {
     "tree_undonated": dict(kernels="off", donate=False),
     "fused_donated": dict(kernels="auto", donate=True),
 }
+# The compensated leg (stale-psum only): fused+donated plus EF top-k
+# sparsification at 90% target sparsity through repro.compensate.
+SPARSE_VARIANTS = {
+    **VARIANTS,
+    "sparse_donated": dict(kernels="auto", donate=True, compress="topk:0.1"),
+}
 
 
 def _make_batch(spec, key):
@@ -67,7 +79,8 @@ def _chunk_ms(engine, state, batch, steps: int):
     return min(times) * 1e3, state
 
 
-def _time_mode(mode: str, mesh, steps: int, rounds: int) -> dict:
+def _time_mode(mode: str, mesh, steps: int, rounds: int,
+               variants=VARIANTS) -> dict:
     """Interleave the variants round-robin and keep each variant's BEST
     round — wall-clock drifts over a long CPU process, so back-to-back
     serial timing systematically penalises whichever variant runs second."""
@@ -76,7 +89,7 @@ def _time_mode(mode: str, mesh, steps: int, rounds: int) -> dict:
     # in later heap regions and measure ~2-7% slower on this container even
     # for bit-identical compiled steps; biasing construction toward the
     # baseline keeps the comparison conservative.
-    for variant, kw in reversed(list(VARIANTS.items())):
+    for variant, kw in reversed(list(variants.items())):
         eng = planlib.make_train_engine(
             ARCH, SHAPE, mesh, mode=mode, stale_s=STALE_S,
             num_workers=WORKERS, reduced=True,
@@ -90,8 +103,8 @@ def _time_mode(mode: str, mesh, steps: int, rounds: int) -> dict:
             states[variant], m = eng.step(states[variant], batches[variant])
         jax.block_until_ready(m["loss"])
 
-    best = {v: float("inf") for v in VARIANTS}
-    order = list(VARIANTS)
+    best = {v: float("inf") for v in variants}
+    order = list(variants)
     for r in range(rounds):
         # rotate who goes first: whatever slot runs second in a round pays
         # for the other's allocator/cache churn
@@ -108,11 +121,18 @@ def main(quick: bool = True, out: str = "experiments/BENCH_engine_step.json"):
     results = {}
     print("mode,variant,step_ms")
     for mode in MODES:
-        row = _time_mode(mode, mesh, steps, rounds)
-        for variant in VARIANTS:
+        variants = SPARSE_VARIANTS if mode == "stale-psum" else VARIANTS
+        row = _time_mode(mode, mesh, steps, rounds, variants=variants)
+        for variant in variants:
             print(f"{mode},{variant},{row[f'{variant}_ms']:.3f}")
         row["speedup"] = round(
             row["tree_undonated_ms"] / max(row["fused_donated_ms"], 1e-9), 3)
+        if "sparse_donated_ms" in row:
+            # The compensated step vs the DENSE tree baseline: sparsification
+            # must not give back the fused path's win.
+            row["sparse_speedup"] = round(
+                row["tree_undonated_ms"] / max(row["sparse_donated_ms"], 1e-9),
+                3)
         results[mode] = row
 
     record = {
@@ -128,7 +148,8 @@ def main(quick: bool = True, out: str = "experiments/BENCH_engine_step.json"):
     # sync is the only mode the kernels/donation don't route (it runs the
     # exact same compiled step in both variants; readings within 5% are
     # parity). The ring modes AND packed simulate must not be slower.
-    slower = [m for m, r in results.items() if r["speedup"] < 0.95]
+    slower = [m for m, r in results.items()
+              if min(r["speedup"], r.get("sparse_speedup", 9.9)) < 0.95]
     if slower:
         print(f"NOTE: fused+donated slower on: {slower} "
               "(CPU wall-clock; rerun with --full for tighter floors)")

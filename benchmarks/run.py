@@ -44,6 +44,12 @@ def refresh_summary(name: str, timestamp: str, result=None,
             speedups = {m: r["speedup"] for m, r in modes.items()}
             headline["speedups"] = speedups
             headline["min_speedup"] = min(speedups.values())
+            # The compensated (EF top-k sparsified) stale-psum leg, tracked
+            # alongside the dense speedups since PR 5.
+            sparse = {m: r["sparse_speedup"] for m, r in modes.items()
+                      if "sparse_speedup" in r}
+            if sparse:
+                headline["sparse_speedups"] = sparse
     data = {"benches": {}}
     if os.path.exists(out):
         try:

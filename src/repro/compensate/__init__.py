@@ -1,0 +1,133 @@
+"""repro.compensate — staleness compensation between delivery and optimizer.
+
+The paper (Theorem 1) keeps the O(1/sqrt(T)) non-convex rate under staleness
+only when the stepsize shrinks with the staleness bound; two related works
+make that actionable per *realized* delay. This package is that layer, one
+config for every engine mode:
+
+    EngineConfig(lr_scale="none"|"inverse"|"theorem1",   # lr.py
+                 compress="none"|"topk:K"|"thresh:V")    # sparsify.py
+
+* ``lr_scale`` scales each step's effective stepsize: ``inverse`` is the
+  Zhang-Gupta 1/tau rule on the realized delay; ``theorem1`` is the paper's
+  ``mu / (s L sqrt(k))`` on live mu/L estimates pushed by the coherence
+  probe (``Engine.with_lr_signals`` / ``CoherenceHook``).
+* ``compress`` sparsifies the transported gradient/update with error
+  feedback (Candela et al.): the un-sent mass rides in a packed fp32
+  residual carried in ``EngineState.comp`` — donated and sharded by the
+  plan like the gradient ring — and the masked split runs through the
+  fused ``repro.kernels.dispatch.sparsify_topk`` kernel.
+
+Both default to ``"none"``, which is bitwise-identical to the
+uncompensated engine (the core steps take ``compensator=None`` and run the
+exact pre-compensation code — enforced in tests/test_engine_matrix.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro import treemath as tm
+from repro.compensate import lr as lr_lib
+from repro.compensate import sparsify as sp_lib
+from repro.compensate.lr import LR_POLICIES, init_signals, lr_factor, scale_tree
+from repro.compensate.sparsify import (COMPRESS_KINDS, EXACT_TOPK_MAX,
+                                       parse_compress,
+                                       sparsify_with_feedback, topk_count,
+                                       topk_threshold)
+
+__all__ = [
+    "COMPRESS_KINDS", "CompensateConfig", "Compensator", "EXACT_TOPK_MAX",
+    "LR_POLICIES", "init_signals", "lr_factor", "parse_compress",
+    "scale_tree", "sparsify_with_feedback", "topk_count", "topk_threshold",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompensateConfig:
+    """Validated compensation knobs (one per EngineConfig)."""
+    lr_scale: str = "none"     # none | inverse | theorem1
+    compress: str = "none"     # none | topk:K | thresh:V
+    s: int = 0                 # staleness bound (theorem1 denominator)
+
+    def __post_init__(self):
+        if self.lr_scale not in LR_POLICIES:
+            raise ValueError(f"lr_scale must be one of {LR_POLICIES}, "
+                             f"got {self.lr_scale!r}")
+        parse_compress(self.compress)  # raises on bad grammar
+
+    @property
+    def active(self) -> bool:
+        return self.lr_scale != "none" or self.compress != "none"
+
+
+class Compensator:
+    """The per-engine compensation pipeline the core steps call.
+
+    Stateless w.r.t. shapes: the residual/signal state lives in the comp
+    pytree (``EngineState.comp``) built by :meth:`init`, threaded through
+    the jitted step, and every shape it needs is re-derived from the trees
+    it is handed (PackSpecs are static, so this is free under jit).
+    """
+
+    def __init__(self, cfg: CompensateConfig):
+        self.cfg = cfg
+        self.kind, self.amount = parse_compress(cfg.compress)
+
+    @property
+    def sparsifies(self) -> bool:
+        return self.kind != "none"
+
+    @property
+    def scales(self) -> bool:
+        return self.cfg.lr_scale != "none"
+
+    # -- comp state --------------------------------------------------------
+    def init(self, params, num_workers: Optional[int] = None) -> dict:
+        """Residual (zero, packed, block-padded like the gradient ring) plus
+        the LR policy's signals. ``num_workers`` selects the per-worker
+        [P, D] residual layout (simulate mode)."""
+        from repro.kernels import dispatch
+        comp = dict(init_signals(self.cfg.lr_scale))
+        if self.sparsifies:
+            width = tm.padded_size(tm.pack_spec(params).total,
+                                   dispatch.PACK_ALIGN)
+            shape = (num_workers, width) if num_workers else (width,)
+            comp["resid"] = jnp.zeros(shape, jnp.float32)
+        return comp
+
+    # -- sparsification ----------------------------------------------------
+    def sparsify_tree(self, comp: dict, tree, lead_ndim: int = 0):
+        """EF-sparsify a gradient/update pytree via its packed flat view.
+        Returns ``(tree', comp', metrics)``; a no-op for compress='none'."""
+        if not self.sparsifies:
+            return tree, comp, {}
+        from repro.kernels import dispatch
+        spec = tm.pack_spec(tree, lead_ndim=lead_ndim)
+        vec = tm.tree_pack(tree, lead_ndim=lead_ndim,
+                           pad_to=dispatch.PACK_ALIGN)
+        sent, resid, sparsity = sparsify_with_feedback(
+            vec, comp["resid"], self.kind, self.amount, spec.total)
+        comp = {**comp, "resid": resid}
+        return tm.tree_unpack(sent, spec), comp, {"sparsity": sparsity}
+
+    def sparsify_packed(self, comp: dict, vec, true_size: int):
+        """Same split for callers already holding the packed view (the
+        simulate-mode packed pending ring)."""
+        if not self.sparsifies:
+            return vec, comp, {}
+        sent, resid, sparsity = sparsify_with_feedback(
+            vec, comp["resid"], self.kind, self.amount, true_size)
+        return sent, {**comp, "resid": resid}, {"sparsity": sparsity}
+
+    # -- LR scaling --------------------------------------------------------
+    def lr_factor(self, comp: dict, staleness, step):
+        """Per-step stepsize factor (1.0 for lr_scale='none')."""
+        if not self.scales:
+            return jnp.float32(1.0)
+        return lr_factor(self.cfg.lr_scale, comp, staleness, step, self.cfg.s)
+
+    def scale_tree(self, tree, factor):
+        return scale_tree(tree, factor)

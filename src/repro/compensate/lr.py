@@ -1,0 +1,71 @@
+"""Staleness-aware learning-rate policies (the Theorem-1 stepsize, live).
+
+Two rules, selected by ``EngineConfig(lr_scale=...)``:
+
+* ``"inverse"``  — Zhang & Gupta (arXiv:1511.05950): scale the stepsize by
+  ``1 / tau`` with ``tau = 1 + d`` the *realized* total delay of the
+  gradient applied this step (``d`` = mean sampled delay; ``d = 0`` —
+  including mode="sync" — leaves the stepsize untouched, so the policy is
+  exact-sync-compatible). In simulate mode the rule is per *source* worker:
+  each worker's outgoing update is scaled by the mean total delay of its own
+  deliveries, the per-worker form of the same rule.
+
+* ``"theorem1"`` — the paper's stepsize ``eta_k = mu / (s L sqrt(k))`` as a
+  multiplicative factor on whatever ``optim/schedules.py`` schedule the
+  optimizer already carries: ``scale_k = mu_hat / (max(s,1) * L_hat *
+  sqrt(k))``. ``mu_hat`` / ``L_hat`` are *live* signals carried in
+  ``EngineState.comp`` (defaults 1.0) and refreshed from outside the jitted
+  step by ``Engine.with_lr_signals`` — the CoherenceHook pushes the
+  Definition-1 coherence estimate and a secant Lipschitz estimate from the
+  probe-gradient dots every observation (``core/coherence.py``), exactly the
+  "Theorem-1 stepsize on live mu/L estimates" ROADMAP item.
+
+The factor multiplies the optimizer's additive *delta* (delta = -eta *
+direction for every optimizer in ``repro.optim``), so scaling the delta IS
+scaling the effective stepsize — uniformly for SGD and the adaptive family,
+and composed with (not replacing) any lr schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coherence as coh
+
+LR_POLICIES = ("none", "inverse", "theorem1")
+
+
+def init_signals(policy: str) -> dict:
+    """State the policy carries in ``EngineState.comp`` (empty for the
+    stateless rules)."""
+    if policy == "theorem1":
+        return {"mu": jnp.float32(1.0), "lip": jnp.float32(1.0)}
+    return {}
+
+
+def lr_factor(policy: str, comp: dict, staleness, step, s: int) -> jax.Array:
+    """The per-step stepsize factor. ``staleness`` is the realized mean
+    delay (scalar, or [P] per source worker in simulate mode — the factor
+    broadcasts); ``step`` the 0-based iteration counter."""
+    if policy == "inverse":
+        return 1.0 / (1.0 + jnp.asarray(staleness, jnp.float32))
+    if policy == "theorem1":
+        k = jnp.asarray(step, jnp.float32) + 1.0
+        return jnp.broadcast_to(
+            coh.theorem1_stepsize(comp["mu"], s, comp["lip"], k),
+            jnp.shape(jnp.asarray(staleness, jnp.float32)))
+    raise ValueError(f"unknown lr_scale policy {policy!r}; have {LR_POLICIES}")
+
+
+def scale_tree(tree, factor):
+    """delta * factor with per-leaf dtype preserved (fp32 multiply).
+
+    ``factor`` is a scalar, or [P] against [P, ...] leaves (per-worker
+    simulate updates)."""
+    f = jnp.asarray(factor, jnp.float32)
+
+    def one(x):
+        fx = f.reshape(f.shape + (1,) * (x.ndim - f.ndim)) if f.ndim else f
+        return (x.astype(jnp.float32) * fx).astype(x.dtype)
+
+    return jax.tree.map(one, tree)

@@ -115,13 +115,22 @@ def make_stale_train_step(
     loss_fn: Callable[[Pytree, Pytree], jax.Array],
     optimizer: Optimizer,
     cfg: StaleSyncConfig,
+    compensator=None,
 ):
     """Returns step(state, batch) -> (state, metrics).
 
     ``batch`` leaves have a leading global-batch axis; it is reshaped to
     [P, B/P, ...] so each worker computes its own gradient (a vmap, which
     under pjit shards over the data axis — per-device work is identical to
-    a plain data-parallel step)."""
+    a plain data-parallel step).
+
+    ``compensator`` (a ``repro.compensate.Compensator``) slots the
+    compensation layer between delivery and the optimizer: the delivered
+    aggregate is EF-sparsified and the optimizer's delta is scaled by the
+    staleness-aware LR factor. The step then takes/returns the comp state:
+    ``step(state, batch, bound=, comp=) -> (state, comp, metrics)``. With
+    ``compensator=None`` (default) this code path is untouched and the
+    legacy 2-tuple signature/behavior is preserved bitwise."""
     p = cfg.num_workers
     # One realized delay source for the whole step (repro.delays): the
     # legacy ``delay_table`` becomes a Schedule source; samplers draw from
@@ -145,7 +154,8 @@ def make_stale_train_step(
         return jax.vmap(one)(shaped)  # (losses [P], grads [P, ...])
 
     def step(state: StaleTrainState, batch,
-             bound: Optional[jax.Array] = None) -> Tuple[StaleTrainState, dict]:
+             bound: Optional[jax.Array] = None,
+             comp: Pytree = None) -> Tuple[StaleTrainState, dict]:
         key, kdelay = jax.random.split(state.key)
         if cfg.per_worker_delays:
             losses, grads = per_worker_grads(state.params, batch)
@@ -160,6 +170,12 @@ def make_stale_train_step(
 
         slots = cfg.slots
         write = jnp.mod(state.step, slots)
+        # Trace-time bookkeeping for the compensator (each box is written at
+        # most once per trace): the kernel path EF-splits the PACKED
+        # aggregate before unpacking, saving one tree_pack + tree_unpack of
+        # the full [D] gradient vs re-packing the unpacked tree (the
+        # residual shares the packed width by construction).
+        comp_box, cmetrics = [comp], {}
         if cfg.kernels:
             # Packed hot path: gradients concatenate once into a contiguous
             # [P, D] (or [D]) view, the ring holds packed rows, and delivery
@@ -176,6 +192,10 @@ def make_stale_train_step(
             def kernel_agg(sel, weights):
                 aggv = dispatch.stale_accum(
                     jnp.zeros((sel.shape[-1],), jnp.float32), sel, weights)
+                if compensator is not None and compensator.sparsifies:
+                    aggv, comp_box[0], cm = compensator.sparsify_packed(
+                        comp_box[0], aggv, spec.total)
+                    cmetrics.update(cm)
                 return tm.tree_unpack(aggv, spec, dtype=jnp.float32)
         else:
             to_buffer = grads if cfg.per_worker_delays else gmean
@@ -236,7 +256,18 @@ def make_stale_train_step(
                     gbuf)
             staleness = jnp.broadcast_to(d, (p,))
 
+        mean_stale = staleness.astype(jnp.float32).mean()
+        comp = comp_box[0]
+        if compensator is not None and compensator.sparsifies and not cmetrics:
+            # Tree layout, or the kernels s=0 / aggregate shortcuts that
+            # never route through kernel_agg: split via the packed tree view.
+            agg, comp, cm = compensator.sparsify_tree(comp, agg)
+            cmetrics.update(cm)
         delta, opt_state = optimizer.update(agg, state.opt_state, state.params)
+        if compensator is not None and compensator.scales:
+            factor = compensator.lr_factor(comp, mean_stale, state.step)
+            delta = compensator.scale_tree(delta, factor)
+            cmetrics["lr_scale"] = factor
         params = tm.tree_add(state.params, delta)
 
         new_state = StaleTrainState(
@@ -245,8 +276,11 @@ def make_stale_train_step(
         metrics = {
             "loss": losses.mean(),
             "grad_norm": tm.tree_norm(agg),
-            "mean_staleness": staleness.astype(jnp.float32).mean(),
+            "mean_staleness": mean_stale,
+            **cmetrics,
         }
+        if compensator is not None:
+            return new_state, comp, metrics
         return new_state, metrics
 
     return step
@@ -281,11 +315,25 @@ def init_sync_state(params: Pytree, optimizer: Optimizer) -> SyncTrainState:
                           step=jnp.int32(0))
 
 
-def make_sync_train_step_lean(loss_fn, optimizer: Optimizer):
-    def step(state: SyncTrainState, batch):
+def make_sync_train_step_lean(loss_fn, optimizer: Optimizer,
+                              compensator=None):
+    def step(state: SyncTrainState, batch, comp: Pytree = None):
         loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        cmetrics = {}
+        if compensator is not None:
+            # Staleness is identically 0 here, so "inverse" is a no-op and
+            # "theorem1" reduces to its pure schedule factor — sync stays
+            # the s=0 reference point of the compensated sweeps.
+            grads, comp, cmetrics = compensator.sparsify_tree(comp, grads)
         delta, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        if compensator is not None and compensator.scales:
+            factor = compensator.lr_factor(comp, jnp.float32(0.0), state.step)
+            delta = compensator.scale_tree(delta, factor)
+            cmetrics = {**cmetrics, "lr_scale": factor}
         params = tm.tree_add(state.params, delta)
-        return SyncTrainState(params=params, opt_state=opt_state,
-                              step=state.step + 1), {"loss": loss}
+        new_state = SyncTrainState(params=params, opt_state=opt_state,
+                                   step=state.step + 1)
+        if compensator is not None:
+            return new_state, comp, {"loss": loss, **cmetrics}
+        return new_state, {"loss": loss}
     return step

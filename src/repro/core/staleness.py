@@ -181,11 +181,21 @@ def make_sim_step(
     update_fn: UpdateFn,
     cfg: StalenessConfig,
     server_apply: Optional[ServerApply] = None,
+    compensator=None,
 ):
     """Build one jit-able engine step: ``step(state, batches) -> (state, metrics)``.
 
     ``batches`` must have a leading worker axis of size ``P`` on every leaf
     (each worker consumes its own data shard, as in the paper).
+
+    ``compensator`` (``repro.compensate.Compensator``) compensates each
+    worker's *outgoing* update before it enters the delivery ring: the
+    update is scaled by the worker's realized mean total delay (the
+    per-source form of the 1/tau rule — the delays are drawn in the same
+    step, so the scale sees them) and then EF-sparsified against a
+    per-worker [P, D] packed residual. The step then takes/returns the comp
+    state (``(state, comp, metrics)``); ``compensator=None`` keeps the
+    legacy signature and bitwise behavior.
     """
     if cfg.server_side and server_apply is None:
         raise ValueError("server_side=True requires a server_apply transform")
@@ -193,8 +203,31 @@ def make_sim_step(
     slots = cfg.buffer_slots
     source = cfg.delay.realize(num_workers=p)
 
+    def compensate(comp, updates, delays, step, packed_true_size=None):
+        """Scale-then-sparsify each source worker's update; ``updates`` is
+        the pytree (tree layout) or the packed [P, D] view (packed layout,
+        ``packed_true_size`` set)."""
+        lr_metrics = {}
+        if compensator.scales:
+            out_delay = delays.astype(jnp.float32).mean(axis=1)    # [P]
+            factor = jnp.broadcast_to(
+                compensator.lr_factor(comp, out_delay, step), (p,))
+            if packed_true_size is not None:
+                updates = updates * factor[:, None]
+            else:
+                updates = compensator.scale_tree(updates, factor)
+            lr_metrics["lr_scale"] = factor
+        if packed_true_size is not None:
+            updates, comp, cmetrics = compensator.sparsify_packed(
+                comp, updates, packed_true_size)
+        else:
+            updates, comp, cmetrics = compensator.sparsify_tree(
+                comp, updates, lead_ndim=1)
+        return updates, comp, {**cmetrics, **lr_metrics}
+
     def packed_step(state: SimState, batches: Pytree,
-                    bound: Optional[jax.Array] = None) -> Tuple[SimState, dict]:
+                    bound: Optional[jax.Array] = None,
+                    comp: Pytree = None) -> Tuple[SimState, dict]:
         from repro.kernels import dispatch
         key, kdelay, kupd = jax.random.split(state.key, 3)
         pspec = tm.pack_spec(state.caches, lead_ndim=1)
@@ -227,6 +260,10 @@ def make_sim_step(
             delays = jnp.minimum(delays, jnp.asarray(bound, jnp.int32))
         uvec = tm.tree_pack(updates, lead_ndim=1,
                             pad_to=dispatch.PACK_ALIGN)          # [P, D]
+        if compensator is not None:
+            uvec, comp, cmetrics = compensate(
+                comp, uvec, delays, state.step, packed_true_size=pspec.total)
+            metrics = {**metrics, **cmetrics}
         cursor = jnp.mod(state.step, slots)
         ring = jax.lax.dynamic_update_index_in_dim(
             ring, jnp.zeros_like(arrived)[:, None], cursor, axis=1)
@@ -243,10 +280,13 @@ def make_sim_step(
             pending={"ring": ring, "arrived": arrived_next},
             update_state=update_state, server_state=state.server_state,
             step=state.step + 1, key=key)
+        if compensator is not None:
+            return new_state, comp, metrics
         return new_state, metrics
 
     def step(state: SimState, batches: Pytree,
-             bound: Optional[jax.Array] = None) -> Tuple[SimState, dict]:
+             bound: Optional[jax.Array] = None,
+             comp: Pytree = None) -> Tuple[SimState, dict]:
         key, kdelay, kupd = jax.random.split(state.key, 3)
 
         # 1. deliver arrivals scheduled for this iteration.
@@ -275,6 +315,10 @@ def make_sim_step(
             # Dynamic staleness control (repro.engine): clamp the sampled
             # delay to an (inclusive, possibly traced) runtime bound.
             delays = jnp.minimum(delays, jnp.asarray(bound, jnp.int32))
+        if compensator is not None:
+            updates, comp, cmetrics = compensate(
+                comp, updates, delays, state.step)
+            metrics = {**metrics, **cmetrics}
         pending = _dispatch(pending, updates, delays, slots)
 
         new_state = SimState(
@@ -285,6 +329,8 @@ def make_sim_step(
             step=state.step + 1,
             key=key,
         )
+        if compensator is not None:
+            return new_state, comp, metrics
         return new_state, metrics
 
     return packed_step if cfg.kernels else step

@@ -9,10 +9,25 @@
                                     hierarchical intra/inter-pod composition
                                     (defaults: inter uniform(s), intra zero)
     trace:PATH[:BOUND]              replay measured wall-times (SSP clocks)
+
+``s = 0`` normalization: every spec whose staleness parameter resolves to 0
+parses to :class:`repro.delays.Zero` — the explicit synchronous limit —
+rather than a degenerate instance of its own family. Concretely,
+``uniform``/``uniform:0`` with ``s = 0``, ``geometric`` with ``s = 0``
+(previously a truncated straggler mix that still emitted delays up to 1),
+and a ``multipod`` sub-spec with ``INTER_S = 0`` / ``INTRA_S = 0``
+(previously ``inter_s = 0`` became ``UniformDelay(0)`` while
+``intra_s = 0`` became ``Zero()``) all mean "no delay on that leg" and all
+produce ``Zero()``. ``constant:0`` stays ``Constant(0)`` — it names an
+explicit delay value, not a staleness bound.
+
+``trace:`` paths may themselves contain colons (Windows drive letters,
+URLs): only the *last* ``:``-segment is treated as the bound, and only when
+it is an unsigned integer — ``trace:C:\\runs\\t.jsonl:8`` replays
+``C:\\runs\\t.jsonl`` with bound 8, ``trace:http://host/t.jsonl`` is all
+path.
 """
 from __future__ import annotations
-
-from typing import Optional
 
 from repro.delays.models import (ConstantDelay, DelaySpec, UniformDelay, Zero,
                                  matched_geometric)
@@ -20,19 +35,44 @@ from repro.delays.multipod import MultiPod, pods_of
 from repro.delays.trace import Trace
 
 
+def _uniform_or_zero(s: int) -> DelaySpec:
+    """The s = 0 normalization (module docstring): a zero staleness
+    parameter means the synchronous limit, as an explicit ``Zero()``."""
+    return UniformDelay(s) if s > 0 else Zero()
+
+
+def _parse_trace(rest: str, s: int) -> Trace:
+    if not rest:
+        raise ValueError("trace needs a path: trace:PATH[:BOUND]")
+    # The bound is split off the RIGHT, and only when the last segment is
+    # an unsigned integer — anything else (drive letters, URL ports mid-
+    # path, extensions) belongs to the path.
+    path, bound = rest, (s if s else None)
+    head, sep, tail = rest.rpartition(":")
+    if sep and tail.isdigit():
+        path, bound = head, int(tail)
+    if not path:
+        raise ValueError("trace needs a path: trace:PATH[:BOUND]")
+    return Trace(path, bound=bound)
+
+
 def parse_spec(text: str, s: int = 0, num_workers: int = 1) -> DelaySpec:
     """Parse a ``--delay`` CLI string; ``s`` and ``num_workers`` supply the
     defaults the grammar leaves implicit (see module docstring)."""
     kind, _, rest = text.strip().partition(":")
+    if kind == "trace":
+        return _parse_trace(rest, s)
     args = rest.split(":") if rest else []
     try:
         if kind == "uniform":
-            return UniformDelay(int(args[0]) if args else s)
+            return _uniform_or_zero(int(args[0]) if args else s)
         if kind == "zero":
             return Zero()
         if kind == "constant":
             return ConstantDelay(int(args[0]))
         if kind == "geometric":
+            if s == 0:
+                return Zero()
             trunc = int(args[0]) if args else max(s - 1, 1)
             return matched_geometric(s, num_workers, trunc=trunc)
         if kind == "multipod":
@@ -40,14 +80,8 @@ def parse_spec(text: str, s: int = 0, num_workers: int = 1) -> DelaySpec:
             inter_s = int(args[1]) if len(args) > 1 else s
             intra_s = int(args[2]) if len(args) > 2 else 0
             return MultiPod(pod_of=pods_of(num_workers, pods),
-                            intra=UniformDelay(intra_s) if intra_s else Zero(),
-                            inter=UniformDelay(inter_s))
-        if kind == "trace":
-            if not args or not args[0]:
-                raise ValueError("trace needs a path: trace:PATH[:BOUND]")
-            bound: Optional[int] = int(args[1]) if len(args) > 1 else (
-                s if s else None)
-            return Trace(args[0], bound=bound)
+                            intra=_uniform_or_zero(intra_s),
+                            inter=_uniform_or_zero(inter_s))
     except (IndexError, ValueError) as e:
         raise ValueError(f"bad delay spec {text!r}: {e}") from e
     raise ValueError(

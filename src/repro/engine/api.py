@@ -37,6 +37,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compensate as compensate_lib
 from repro import delays as delays_lib
 from repro.core import ssp as ssp_lib
 from repro.core import stale_sync, staleness
@@ -78,6 +79,16 @@ class EngineConfig:
     # state, params reuse their buffers instead of a full-state copy each
     # step). Escape hatch for callers that re-step a held state.
     donate: bool = True
+    # Staleness compensation (repro.compensate), honored by all four modes:
+    # lr_scale scales each step's effective stepsize from the REALIZED delay
+    # ("inverse" = Zhang-Gupta 1/tau) or the Theorem-1 formula on live mu/L
+    # signals ("theorem1", fed via Engine.with_lr_signals / CoherenceHook);
+    # compress EF-sparsifies the transported gradient/update ("topk:K" keeps
+    # fraction K (0<K<1) or K elements, "thresh:V" keeps |g| >= V), with the
+    # packed residual carried in EngineState.comp. Both "none" (default) are
+    # bitwise-identical to the uncompensated engine.
+    lr_scale: str = "none"
+    compress: str = "none"
     # stale-psum extras (see StaleSyncConfig):
     per_worker_delays: bool = True
     buffer_dtype: Any = jnp.float32
@@ -101,6 +112,9 @@ class EngineConfig:
         if self.kernels not in ("off", "auto", "on"):
             raise ValueError(f"kernels must be 'off'|'auto'|'on', "
                              f"got {self.kernels!r}")
+        # Validates lr_scale/compress grammar (raises on bad specs).
+        compensate_lib.CompensateConfig(lr_scale=self.lr_scale,
+                                        compress=self.compress, s=self.s)
         object.__setattr__(self, "delay", delays_lib.as_spec(self.delay))
         if self.delay is not None:
             if self.mode == "sync" and getattr(self.delay, "bound", None) != 0:
@@ -130,9 +144,15 @@ class EngineState:
     ``bound`` is the inclusive max *delay* currently allowed (clamps whatever
     the delay model / schedule produces); it starts at the config's static
     bound and is lowered/raised via ``Engine.with_staleness``.
+
+    ``comp`` is the compensation layer's state (repro.compensate): the
+    packed error-feedback residual plus the live mu/L signals of the
+    theorem1 LR policy. ``()`` — no leaves, hence no compiled-step change —
+    whenever ``lr_scale`` and ``compress`` are both ``"none"``.
     """
     inner: Pytree
     bound: jax.Array  # int32
+    comp: Pytree = ()
 
 
 @dataclasses.dataclass
@@ -143,11 +163,13 @@ class Engine:
     meta: dict = dataclasses.field(default_factory=dict)
     # wired by build_engine:
     _init_inner: Callable = None   # (params, update_state, key) -> inner
-    _step_inner: Callable = None   # (inner, batch, bound) -> (inner, metrics)
+    _step_inner: Callable = None   # (inner, batch, bound, comp)
+    #                                -> (inner, comp, metrics)
     _params_of: Callable = None    # inner -> params eval view
     _init_params: Callable = None  # key -> params (None when caller supplies)
     _max_bound: int = 0
     _plan: Any = None              # sharding plan (engine/plan.py), if any
+    _init_comp: Callable = None    # params -> comp state (None = no comp)
 
     def __post_init__(self):
         self._jit_step = jax.jit(
@@ -166,8 +188,9 @@ class Engine:
                                  donate_argnums=plan.donate_argnums)
 
     def _wrap(self, state: EngineState, batch):
-        inner, metrics = self._step_inner(state.inner, batch, state.bound)
-        return EngineState(inner=inner, bound=state.bound), metrics
+        inner, comp, metrics = self._step_inner(state.inner, batch,
+                                                state.bound, state.comp)
+        return EngineState(inner=inner, bound=state.bound, comp=comp), metrics
 
     # -- lifecycle ---------------------------------------------------------
     def init(self, key: jax.Array, params: Pytree = None,
@@ -187,7 +210,9 @@ class Engine:
                     "(or build from a ModelAPI, which knows how to init)")
             params = self._init_params(key)
         inner = self._init_inner(params, update_state, key)
-        return EngineState(inner=inner, bound=jnp.int32(self._max_bound))
+        comp = self._init_comp(params) if self._init_comp is not None else ()
+        return EngineState(inner=inner, bound=jnp.int32(self._max_bound),
+                           comp=comp)
 
     def step(self, state: EngineState, batch) -> Tuple[EngineState, dict]:
         """One engine step (jit-compiled): ``(state, batch) -> (state, metrics)``."""
@@ -247,6 +272,22 @@ class Engine:
             b = jnp.asarray(s, jnp.int32)
         return dataclasses.replace(
             state, bound=jnp.minimum(b, jnp.int32(self._max_bound)))
+
+    def with_lr_signals(self, state: EngineState, mu, lip=None) -> EngineState:
+        """Refresh the theorem1 LR policy's live curvature signals without
+        rebuilding the engine: ``mu`` is the Definition-1 coherence estimate,
+        ``lip`` an (optional) Lipschitz estimate — both ride in
+        ``EngineState.comp`` and trace into the jitted step, exactly like the
+        dynamic staleness bound. The CoherenceHook pulls this lever from the
+        probe-gradient dots every observation."""
+        if not (isinstance(state.comp, dict) and "mu" in state.comp):
+            raise ValueError(
+                "engine carries no live LR signals: build it with "
+                "EngineConfig(lr_scale='theorem1')")
+        comp = {**state.comp, "mu": jnp.asarray(mu, jnp.float32)}
+        if lip is not None:
+            comp["lip"] = jnp.asarray(lip, jnp.float32)
+        return dataclasses.replace(state, comp=comp)
 
 
 def kernel_placement_ok(kernels: str, arch=None, mesh=None) -> Tuple[bool, str]:
@@ -355,6 +396,20 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
     if cfg.delay is not None:
         meta["delay_spec"] = repr(cfg.delay)
 
+    # Compensation layer (repro.compensate): built only when a knob is set,
+    # so the default path hands compensator=None to the core step builders —
+    # the exact pre-compensation code, bitwise (tested in the engine matrix).
+    ccfg = compensate_lib.CompensateConfig(
+        lr_scale=cfg.lr_scale, compress=cfg.compress, s=cfg.s)
+    compensator = compensate_lib.Compensator(ccfg) if ccfg.active else None
+    init_comp = None
+    if compensator is not None:
+        meta["compensate"] = {"lr_scale": cfg.lr_scale,
+                              "compress": cfg.compress}
+        comp_workers = cfg.num_workers if mode == "simulate" else None
+        init_comp = lambda params: compensator.init(
+            params, num_workers=comp_workers)
+
     def _finish(engine: Engine) -> Engine:
         if mesh is not None and shape is not None:
             from repro.engine import plan as plan_lib  # lazy: plan imports us
@@ -377,36 +432,52 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
             server_side=cfg.server_side,
             kernels=kernel_delivery)
         raw = staleness.make_sim_step(update_fn, sim_cfg,
-                                      server_apply=server_apply)
+                                      server_apply=server_apply,
+                                      compensator=compensator)
 
         def init_inner(params, update_state, key):
             if update_state is None:
                 update_state = optimizer.init(params)
             return staleness.init_sim_state(params, update_state, sim_cfg, key)
 
+        def sim_step_inner(inner, batch, bound, comp):
+            if compensator is None:
+                inner, m = raw(inner, batch, bound=bound)
+            else:
+                inner, comp, m = raw(inner, batch, bound=bound, comp=comp)
+            return inner, comp, _mean_over_workers(m)
+
         return _finish(Engine(
             cfg=cfg, mesh=mesh, meta=meta,
             _init_inner=init_inner,
-            _step_inner=lambda inner, batch, bound: (
-                lambda out: (out[0], _mean_over_workers(out[1]))
-            )(raw(inner, batch, bound=bound)),
+            _step_inner=sim_step_inner,
             _params_of=lambda inner: jax.tree.map(lambda x: x[0], inner.caches),
             _init_params=init_params,
             _max_bound=sim_cfg.delay.bound,
+            _init_comp=init_comp,
         ))
 
     if mode == "sync":
         if loss is None or optimizer is None:
             raise ValueError("sync mode needs (loss, optimizer)")
-        raw = stale_sync.make_sync_train_step_lean(loss, optimizer)
+        raw = stale_sync.make_sync_train_step_lean(loss, optimizer,
+                                                   compensator=compensator)
+
+        def sync_step_inner(inner, batch, _bound, comp):
+            if compensator is None:
+                inner, m = raw(inner, batch)
+                return inner, comp, m
+            return raw(inner, batch, comp=comp)
+
         return _finish(Engine(
             cfg=cfg, mesh=mesh, meta=meta,
             _init_inner=lambda params, _ust, _key:
                 stale_sync.init_sync_state(params, optimizer),
-            _step_inner=lambda inner, batch, _bound: raw(inner, batch),
+            _step_inner=sync_step_inner,
             _params_of=lambda inner: inner.params,
             _init_params=init_params,
             _max_bound=0,
+            _init_comp=init_comp,
         ))
 
     # gradient ring-buffer modes: stale-psum and ssp.
@@ -478,13 +549,22 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
                 f"({scfg.slots} slots from s={cfg.s}); raise s to at least "
                 f"{eff_bound + 1}")
         max_bound = eff_bound
-    raw = stale_sync.make_stale_train_step(loss, optimizer, scfg)
+    raw = stale_sync.make_stale_train_step(loss, optimizer, scfg,
+                                           compensator=compensator)
+
+    def ring_step_inner(inner, batch, bound, comp):
+        if compensator is None:
+            inner, m = raw(inner, batch, bound=bound)
+            return inner, comp, m
+        return raw(inner, batch, bound=bound, comp=comp)
+
     return _finish(Engine(
         cfg=cfg, mesh=mesh, meta=meta,
         _init_inner=lambda params, _ust, key:
             stale_sync.init_state(params, optimizer, scfg, key),
-        _step_inner=lambda inner, batch, bound: raw(inner, batch, bound=bound),
+        _step_inner=ring_step_inner,
         _params_of=lambda inner: inner.params,
         _init_params=init_params,
         _max_bound=max_bound,
+        _init_comp=init_comp,
     ))

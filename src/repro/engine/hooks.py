@@ -68,6 +68,13 @@ class CoherenceHook(Hook):
     ``engine.with_staleness`` — staleness shrinks when coherence degrades
     and relaxes back when it recovers (DESIGN.md §8), with no engine
     rebuild and no buffer reshape.
+
+    When the engine runs the theorem1 LR policy
+    (``EngineConfig(lr_scale="theorem1")``, repro.compensate), the same
+    probe observation also feeds the policy's live signals: the measured mu
+    plus a secant Lipschitz estimate over consecutive (params, probe-grad)
+    pairs are pushed into the engine state via ``engine.with_lr_signals`` —
+    the Theorem-1 stepsize on live mu/L estimates.
     """
 
     def __init__(self, loss_fn, probe_batch, dim: int, window: int = 8,
@@ -90,6 +97,7 @@ class CoherenceHook(Hook):
         self.every = max(every, 1)
         self.last: dict = {}
         self.mu_trace: list = []
+        self._secant = None   # lazy: sized from the first probe gradient
 
     def on_step(self, ctx: StepContext) -> None:
         if (ctx.step + 1) % self.every:
@@ -98,6 +106,14 @@ class CoherenceHook(Hook):
         self.monitor, out = self._observe(self.monitor, g)
         self.last = {"mu": float(out["mu"]),
                      "grad_norm": float(out["grad_norm"])}
+        if getattr(ctx.engine.cfg, "lr_scale", "none") == "theorem1":
+            if self._secant is None:
+                self._secant = coh.init_secant(g.shape[-1])
+            x = tm.tree_flatten_to_vector(ctx.engine.params(ctx.state))
+            self._secant = coh.update_secant(self._secant, x, g)
+            ctx.state = ctx.engine.with_lr_signals(
+                ctx.state, out["mu"], self._secant.l_hat)
+            self.last["lip"] = float(self._secant.l_hat)
         if self.controller is not None:
             self.ctl = self.controller.step(self.ctl, out["mu"])
             allowed = int(self.ctl["allowed_s"])

@@ -275,7 +275,20 @@ def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
         batch_struct, batch_sh = _batch_struct_and_shardings(
             api, shape, mesh, rules)
 
-    state_sh = EngineState(inner=inner_sh, bound=_replicated(mesh))
+    # Compensation state (repro.compensate): simulate's per-worker [P, D]
+    # error-feedback residual shards its leading worker axis like every
+    # other per-worker buffer (the packed D axis mixes leaves, so only the
+    # worker axis can shard); aggregate residuals and the scalar mu/L
+    # signals replicate. Donation below covers it — the residual is
+    # rewritten in place every step, exactly like the gradient ring.
+    def comp_shard(leaf):
+        if cfg.mode == "simulate" and getattr(leaf, "ndim", 0) == 2:
+            return _lead(mesh, wax, None)
+        return _replicated(mesh)
+
+    comp_sh = jax.tree.map(comp_shard, state_struct.comp)
+    state_sh = EngineState(inner=inner_sh, bound=_replicated(mesh),
+                           comp=comp_sh)
     # Donate the state where aliasing actually elides work: the ring-buffer
     # modes carry a [slots(, P), ...] gbuf of which ONE slot changes per
     # step — undonated, XLA materialises the whole ring afresh every step.
@@ -298,6 +311,7 @@ def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
               "mode": mode_label("train", cfg.mode, cfg.s),
               "engine_mode": cfg.mode, "s": cfg.s, "workers": p,
               "kernels": engine.meta.get("kernels"),
+              "compensate": engine.meta.get("compensate"),
               "donate": donate},
     )
     engine._attach_plan(plan)

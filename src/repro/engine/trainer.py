@@ -94,7 +94,12 @@ class Trainer:
         history: List[dict] = []
         curve: list = []
         batches_to_target, converged = None, False
-        stale_sum, stale_n = 0.0, 0   # realized-delay running mean (log rows)
+        # Realized-delay running mean over EVERY step (kept as a lazy jax
+        # scalar so accumulation never forces a device sync; converted only
+        # when a log row is emitted). Accumulating on log rows only — the
+        # pre-PR 5 behavior — biased the realized-vs-nominal check toward
+        # whatever the delay process happened to do on log-interval steps.
+        stale_sum, stale_n = 0.0, 0
         for t in range(steps):
             try:
                 batch = next_batch()
@@ -102,6 +107,9 @@ class Trainer:
                 break
             state, metrics = engine.step(ctx.state, batch)
             ctx.state, ctx.step, ctx.metrics, ctx.row = state, t, metrics, None
+            if "mean_staleness" in metrics:
+                stale_sum = stale_sum + metrics["mean_staleness"]
+                stale_n += 1
             for h in self.hooks:
                 h.on_step(ctx)
 
@@ -111,15 +119,21 @@ class Trainer:
                 if "loss" in metrics:
                     ctx.row["loss"] = float(metrics["loss"])
                 if "mean_staleness" in metrics:
-                    ms = float(metrics["mean_staleness"])
-                    ctx.row["mean_staleness"] = ms
-                    # Realized mean TOTAL delay (1 + r), cumulative over the
-                    # logged steps — sweeps verify a delay spec's effective
-                    # staleness against its nominal spec.mean_total_delay.
-                    stale_sum += ms
-                    stale_n += 1
+                    ctx.row["mean_staleness"] = float(
+                        metrics["mean_staleness"])
+                    # Realized mean TOTAL delay (1 + r) over ALL steps so
+                    # far — sweeps verify a delay spec's effective staleness
+                    # against its nominal spec.mean_total_delay.
                     ctx.row["mean_total_delay"] = round(
-                        1.0 + stale_sum / stale_n, 4)
+                        1.0 + float(stale_sum) / stale_n, 4)
+                # Compensation diagnostics (repro.compensate): realized
+                # sparsity and the effective stepsize factor, beside the
+                # realized delay they compensate.
+                if "sparsity" in metrics:
+                    ctx.row["sparsity"] = round(float(metrics["sparsity"]), 4)
+                if "lr_scale" in metrics:
+                    ctx.row["lr_scale"] = round(
+                        float(jax.numpy.mean(metrics["lr_scale"])), 6)
                 if engine._max_bound:
                     # live dynamic staleness bound (coherence-controller lever)
                     ctx.row["bound"] = int(jax.device_get(ctx.state.bound))

@@ -43,6 +43,7 @@ from repro.kernels import coherence as _co
 from repro.kernels import flash_attention as _fl
 from repro.kernels import fused_adam as _fa
 from repro.kernels import ref
+from repro.kernels import sparsify as _sp
 from repro.kernels import stale_accum as _sa
 
 
@@ -155,6 +156,28 @@ def stale_accum(params, buffer, weights, block_d: int = 1024):
         return ref.stale_accum(params, buffer, weights)
     return _sa.stale_accum(params, buffer, weights, block_d=block_d,
                            interpret=backend == "pallas-interpret")
+
+
+def sparsify_topk(acc, thr, block_d: int = 1024):
+    """Error-feedback split: acc [*, D], thr [*] -> (sent, resid), both
+    [*, D] with ``sent = where(|acc| >= thr, acc, 0)`` and
+    ``resid = acc - sent``. Accepts a flat [D] accumulator with a scalar
+    threshold or row-batched [R, D] with per-row thresholds; falls back to
+    ref when D isn't a block_d multiple."""
+    d = acc.shape[-1]
+    lead = acc.shape[:-1]
+    backend = _backend("sparsify_topk", acc.size,
+                       d > 0 and d % block_d == 0,
+                       f"D={d} % block_d={block_d}")
+    if backend == "ref":
+        return ref.sparsify_mask(acc, thr)
+    rows = 1
+    for n in lead:
+        rows *= n
+    sent, resid = _sp.sparsify_topk(
+        acc.reshape(rows, d), jnp.broadcast_to(thr, lead).reshape(rows),
+        block_d=block_d, interpret=backend == "pallas-interpret")
+    return sent.reshape(acc.shape), resid.reshape(acc.shape)
 
 
 def coherence_dots(history, g, block_d: int = 2048):

@@ -12,6 +12,17 @@ def stale_accum(params: jax.Array, buffer: jax.Array, weights: jax.Array) -> jax
     return (params.astype(jnp.float32) + acc).astype(params.dtype)
 
 
+def sparsify_mask(acc: jax.Array, thr: jax.Array):
+    """sent = where(|acc| >= thr, acc, 0); resid = acc - sent.
+
+    ``thr`` has one scalar per leading row of ``acc`` (shape
+    ``acc.shape[:-1]``); magnitudes compare in fp32."""
+    a32 = acc.astype(jnp.float32)
+    t32 = jnp.asarray(thr, jnp.float32)[..., None]
+    sent = jnp.where(jnp.abs(a32) >= t32, a32, 0.0)
+    return sent.astype(acc.dtype), (a32 - sent).astype(acc.dtype)
+
+
 def coherence_dots(history: jax.Array, g: jax.Array):
     """history [W, D], g [D] -> (dots [W], hist_sq [W], g_sq []). fp32."""
     h32 = history.astype(jnp.float32)

@@ -96,6 +96,15 @@ def main():
                     help="route the engine hot spots (stale delivery, "
                          "coherence probe, Adam) through repro.kernels "
                          "(off = bitwise-legacy tree math)")
+    ap.add_argument("--compress", default="none",
+                    help="EF gradient sparsification (repro.compensate): "
+                         "none | topk:K (keep fraction 0<K<1 or K elements) "
+                         "| thresh:V")
+    ap.add_argument("--lr-scale", default="none",
+                    choices=["none", "inverse", "theorem1"],
+                    help="staleness-aware stepsize: inverse = Zhang 1/tau "
+                         "on the realized delay; theorem1 = mu/(s L sqrt(k)) "
+                         "on live mu/L signals (needs --coherence)")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--coherence", action="store_true",
                     help="enable the gradient-coherence monitor + controller")
@@ -141,8 +150,12 @@ def main():
         opt_kwargs["kernel"] = True   # fused-Adam hot spot (opt-in)
     opt = optlib.get_optimizer(opt_name, **opt_kwargs)
     shape = InputShape(f"train_cli_{args.seq}", args.seq, args.batch, "train")
+    if args.lr_scale == "theorem1" and not args.coherence:
+        raise SystemExit("--lr-scale theorem1 takes its live mu/L signals "
+                         "from the coherence probe: pass --coherence")
     ecfg = EngineConfig(mode=mode, num_workers=args.workers, s=args.stale,
                         delay=delay_spec, kernels=args.kernels,
+                        compress=args.compress, lr_scale=args.lr_scale,
                         ssp_steps=max(args.steps, 1), ssp_seed=args.seed)
     engine = build_engine(api, opt, ecfg, mesh=mesh, arch=arch, shape=shape)
     state = engine.init(jax.random.PRNGKey(args.seed))
@@ -178,6 +191,15 @@ def main():
         if realized is not None:
             print(f"delay: realized mean total delay {realized:.3f} "
                   f"(nominal {delay_spec.mean_total_delay:.3f})")
+
+    if (args.compress != "none" or args.lr_scale != "none") and result.history:
+        last = result.history[-1]
+        bits = [f"compress={args.compress}", f"lr_scale={args.lr_scale}"]
+        if "sparsity" in last:
+            bits.append(f"realized sparsity {last['sparsity']:.3f}")
+        if "lr_scale" in last:
+            bits.append(f"effective factor {last['lr_scale']:.4f}")
+        print("compensate: " + " ".join(bits))
 
     if args.kernels != "off":
         rep = engine.dispatch_report()

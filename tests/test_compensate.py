@@ -1,0 +1,274 @@
+"""Tests for the staleness compensation subsystem (``repro.compensate``).
+
+Covers the EF sparsification invariants (conservation, top-k counts,
+threshold semantics, kernel-vs-ref dispatch), the LR policies (Zhang 1/tau
+on realized delays, Theorem-1 on live mu/L signals), and the engine wiring
+(residual-in-state, donation-compatible, live-signal refresh, metrics).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compensate
+from repro import treemath as tm
+from repro.engine import EngineConfig, Trainer, build_engine
+from repro.kernels import dispatch, ref
+from repro.optim import sgd
+
+W_TRUE = jnp.arange(6.0)
+
+
+def quad_loss(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] - y) ** 2)
+
+
+def make_batch(t, p=4, per=8, workers=0, dim=6):
+    k = jax.random.fold_in(jax.random.PRNGKey(1), t)
+    x = jax.random.normal(k, (p * per, dim))
+    y = x @ W_TRUE
+    if workers:
+        return (x.reshape(workers, per, dim), y.reshape(workers, per))
+    return (x, y)
+
+
+# -- grammar -----------------------------------------------------------------
+
+def test_parse_compress_grammar():
+    assert compensate.parse_compress("none") == ("none", None)
+    assert compensate.parse_compress(None) == ("none", None)
+    assert compensate.parse_compress("topk:0.1") == ("topk", 0.1)
+    assert compensate.parse_compress("topk:128") == ("topk", 128.0)
+    assert compensate.parse_compress("thresh:0.05") == ("thresh", 0.05)
+    for bad in ("topk", "thresh", "topk:0", "topk:-1", "thresh:-0.5",
+                "gzip:2", "none:1", "topk:abc"):
+        with pytest.raises(ValueError):
+            compensate.parse_compress(bad)
+
+
+def test_topk_count_semantics():
+    assert compensate.topk_count(0.1, 1000) == 100   # fraction
+    assert compensate.topk_count(128, 1000) == 128   # absolute
+    assert compensate.topk_count(0.0001, 1000) == 1  # floor at 1
+    assert compensate.topk_count(5000, 1000) == 1000  # clamp to row
+
+
+# -- EF sparsification invariants --------------------------------------------
+
+def test_sparsify_feedback_conserves_mass():
+    """sent + resid' == vec + resid exactly, whatever the selection."""
+    rng = np.random.default_rng(0)
+    vec = jnp.asarray(rng.standard_normal((3, 64)), jnp.float32)
+    resid = jnp.asarray(rng.standard_normal((3, 64)), jnp.float32)
+    for kind, amount in (("topk", 0.25), ("thresh", 0.5)):
+        sent, new_resid, _ = compensate.sparsify_with_feedback(
+            vec, resid, kind, amount, 64)
+        np.testing.assert_array_equal(np.asarray(sent + new_resid),
+                                      np.asarray(vec + resid))
+
+
+def test_sparsify_topk_keeps_k_largest():
+    vec = jnp.asarray([[0.1, -5.0, 0.2, 3.0, -0.3, 0.0, 1.0, -0.01]],
+                      jnp.float32)
+    resid = jnp.zeros_like(vec)
+    sent, new_resid, sparsity = compensate.sparsify_with_feedback(
+        vec, resid, "topk", 2, 8)
+    np.testing.assert_array_equal(
+        np.asarray(sent)[0], [0, -5.0, 0, 3.0, 0, 0, 0, 0])
+    assert float(sparsity) == pytest.approx(1.0 - 2 / 8)
+    # residual re-offers the un-sent mass: a second round with zero new
+    # gradient promotes the next-largest entries.
+    sent2, _, _ = compensate.sparsify_with_feedback(
+        jnp.zeros_like(vec), new_resid, "topk", 2, 8)
+    s2 = np.asarray(sent2)[0]
+    assert s2[6] == pytest.approx(1.0)   # next-largest entries promoted
+    assert np.count_nonzero(s2) == 2
+
+
+def test_sparsify_pad_tail_is_inert():
+    """Zero-padded packed tails never cross the threshold and never count
+    against the realized sparsity (computed over true_size)."""
+    vec = jnp.concatenate([jnp.ones((4,), jnp.float32),
+                           jnp.zeros((60,), jnp.float32)])[None]
+    sent, resid, sparsity = compensate.sparsify_with_feedback(
+        vec, jnp.zeros_like(vec), "topk", 2, 4)   # true_size 4, rest pad
+    assert np.count_nonzero(np.asarray(sent)) >= 2
+    assert 0.0 <= float(sparsity) <= 1.0
+    np.testing.assert_array_equal(np.asarray(resid)[0, 4:], 0.0)
+
+
+def test_sampled_topk_threshold_hits_target_sparsity():
+    """Above EXACT_TOPK_MAX the threshold comes from a strided subsample
+    (DGC-style); the realized sparsity must track the target closely."""
+    d = compensate.EXACT_TOPK_MAX * 4
+    rng = np.random.default_rng(2)
+    vec = jnp.asarray(rng.standard_normal((1, d)), jnp.float32)
+    sent, resid, sparsity = compensate.sparsify_with_feedback(
+        vec, jnp.zeros_like(vec), "topk", 0.1, d)
+    assert 0.87 <= float(sparsity) <= 0.93
+    np.testing.assert_array_equal(np.asarray(sent + resid), np.asarray(vec))
+
+
+def test_dispatch_sparsify_matches_ref_divisible_and_odd():
+    rng = np.random.default_rng(1)
+    for rows, d in ((1, 2048), (3, 1024), (2, 100)):   # last: odd -> ref
+        acc = jnp.asarray(rng.standard_normal((rows, d)), jnp.float32)
+        thr = jnp.asarray(rng.uniform(0.2, 1.0, rows), jnp.float32)
+        sent, resid = dispatch.sparsify_topk(acc, thr)
+        rsent, rresid = ref.sparsify_mask(acc, thr)
+        np.testing.assert_allclose(np.asarray(sent), np.asarray(rsent),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(resid), np.asarray(rresid),
+                                   rtol=1e-6)
+    # flat [D] + scalar threshold form
+    acc = jnp.asarray(rng.standard_normal(1024), jnp.float32)
+    sent, resid = dispatch.sparsify_topk(acc, jnp.float32(0.5))
+    np.testing.assert_array_equal(np.asarray(sent + resid), np.asarray(acc))
+    assert (np.abs(np.asarray(sent)[np.asarray(sent) != 0]) >= 0.5).all()
+
+
+# -- LR policies -------------------------------------------------------------
+
+def test_inverse_scale_matches_realized_delay():
+    """With a constant delay d the effective factor is exactly 1/(1+d)."""
+    from repro import delays
+    p, d = 4, 3
+    eng = build_engine(quad_loss, sgd(0.05), EngineConfig(
+        mode="stale-psum", num_workers=p, s=4,
+        delay=delays.Constant(d), lr_scale="inverse"))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    for t in range(d + 2):   # past the early-step clamp d <= k
+        st, m = eng.step(st, make_batch(t, p))
+    assert float(m["lr_scale"]) == pytest.approx(1.0 / (1.0 + d))
+
+
+def test_inverse_scale_is_identity_at_zero_delay():
+    """d = 0 (incl. sync) leaves the trajectory identical to uncompensated:
+    the policy is exact-sync-compatible."""
+    p = 2
+    for mode in ("sync", "stale-psum"):
+        kw = dict(mode=mode, num_workers=p, s=0)
+        e0 = build_engine(quad_loss, sgd(0.05), EngineConfig(**kw))
+        e1 = build_engine(quad_loss, sgd(0.05),
+                          EngineConfig(lr_scale="inverse", **kw))
+        s0 = e0.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+        s1 = e1.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+        for t in range(3):
+            b = make_batch(t, p)
+            s0, _ = e0.step(s0, b)
+            s1, m1 = e1.step(s1, b)
+        assert float(m1["lr_scale"]) == 1.0
+        np.testing.assert_array_equal(np.asarray(e0.params(s0)["w"]),
+                                      np.asarray(e1.params(s1)["w"]))
+
+
+def test_theorem1_scale_uses_live_signals():
+    """scale_k = mu / (max(s,1) L sqrt(k)), refreshed via with_lr_signals."""
+    p, s = 2, 4
+    eng = build_engine(quad_loss, sgd(0.05), EngineConfig(
+        mode="stale-psum", num_workers=p, s=s, lr_scale="theorem1"))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    st, m = eng.step(st, make_batch(0, p))             # k=1, mu=L=1 defaults
+    assert float(m["lr_scale"]) == pytest.approx(1.0 / s)
+    st = eng.with_lr_signals(st, mu=0.5, lip=2.0)
+    st, m = eng.step(st, make_batch(1, p))             # k=2
+    assert float(m["lr_scale"]) == pytest.approx(
+        0.5 / (s * 2.0 * np.sqrt(2.0)))
+
+
+def test_with_lr_signals_requires_theorem1():
+    eng = build_engine(quad_loss, sgd(0.05), EngineConfig(
+        mode="stale-psum", num_workers=2, s=2))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    with pytest.raises(ValueError, match="lr_scale"):
+        eng.with_lr_signals(st, 0.5)
+
+
+def test_coherence_hook_feeds_theorem1_signals():
+    """CoherenceHook pushes mu + secant L into the engine state; the
+    logged lr_scale moves away from the default-signal value."""
+    from repro.engine import CoherenceHook
+    p = 2
+    eng = build_engine(quad_loss, sgd(0.05), EngineConfig(
+        mode="stale-psum", num_workers=p, s=2, lr_scale="theorem1"))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    hook = CoherenceHook(quad_loss, make_batch(99, p), dim=6, window=4,
+                         every=1)
+    res = Trainer(eng, hooks=[hook]).run(
+        (make_batch(t, p) for t in range(6)), 6, state=st, log_every=2)
+    assert "lip" in hook.last and np.isfinite(hook.last["lip"])
+    comp = res.state.comp
+    assert float(comp["lip"]) == pytest.approx(hook.last["lip"])
+    assert float(comp["mu"]) == pytest.approx(hook.last["mu"])
+
+
+# -- engine wiring -----------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ("sync", "stale-psum", "ssp", "simulate"))
+def test_residual_rides_engine_state(mode):
+    """The packed EF residual lives in EngineState.comp ([P, D] per-worker
+    in simulate, [D] otherwise), starts zero, and becomes non-trivial."""
+    p = 4
+    eng = build_engine(quad_loss, sgd(0.05), EngineConfig(
+        mode=mode, num_workers=p, s=3, ssp_steps=8, compress="topk:0.25"))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    width = tm.padded_size(6, dispatch.PACK_ALIGN)
+    expect = (p, width) if mode == "simulate" else (width,)
+    assert st.comp["resid"].shape == expect
+    np.testing.assert_array_equal(np.asarray(st.comp["resid"]), 0.0)
+    for t in range(3):
+        st, m = eng.step(
+            st, make_batch(t, p, workers=p if mode == "simulate" else 0))
+    assert np.abs(np.asarray(st.comp["resid"])).max() > 0
+    assert 0.0 < float(m["sparsity"]) < 1.0
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_thresh_mode_all_or_nothing():
+    """A huge threshold sends nothing (params frozen, residual accrues);
+    threshold 0 sends everything (bitwise-equal params to uncompensated
+    for SGD, whose delta is linear in the gradient)."""
+    p = 2
+    base = dict(mode="stale-psum", num_workers=p, s=0)
+    e0 = build_engine(quad_loss, sgd(0.05), EngineConfig(**base))
+    ehi = build_engine(quad_loss, sgd(0.05),
+                       EngineConfig(compress="thresh:1e9", **base))
+    elo = build_engine(quad_loss, sgd(0.05),
+                       EngineConfig(compress="thresh:0", **base))
+    s0 = e0.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    shi = ehi.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    slo = elo.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    for t in range(3):
+        b = make_batch(t, p)
+        s0, _ = e0.step(s0, b)
+        shi, mhi = ehi.step(shi, b)
+        slo, _ = elo.step(slo, b)
+    np.testing.assert_array_equal(np.asarray(ehi.params(shi)["w"]), 0.0)
+    assert float(mhi["sparsity"]) == pytest.approx(1.0)
+    assert np.abs(np.asarray(shi.comp["resid"])).max() > 0
+    np.testing.assert_allclose(np.asarray(elo.params(slo)["w"]),
+                               np.asarray(e0.params(s0)["w"]), rtol=1e-6)
+
+
+def test_trainer_logs_compensation_columns():
+    p = 2
+    eng = build_engine(quad_loss, sgd(0.05), EngineConfig(
+        mode="stale-psum", num_workers=p, s=2,
+        compress="topk:0.5", lr_scale="inverse"))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
+    res = Trainer(eng).run((make_batch(t, p) for t in range(4)), 4,
+                           state=st, log_every=2)
+    row = res.history[-1]
+    assert "sparsity" in row and "lr_scale" in row
+    assert 0.0 <= row["sparsity"] <= 1.0
+    assert 0.0 < row["lr_scale"] <= 1.0
+
+
+def test_bad_knobs_rejected_by_engine_config():
+    with pytest.raises(ValueError):
+        EngineConfig(mode="sync", lr_scale="linear")
+    with pytest.raises(ValueError):
+        EngineConfig(mode="sync", compress="topk")
+    with pytest.raises(ValueError):
+        EngineConfig(mode="sync", compress="gzip:9")

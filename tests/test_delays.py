@@ -231,6 +231,36 @@ def test_multipod_rejects_aggregate_and_bad_worker_count():
         delays.pods_of(5, 2)
 
 
+# -- trainer realized-vs-nominal ---------------------------------------------
+
+def test_trainer_realized_delay_unbiased_vs_log_interval():
+    """``mean_total_delay`` accumulates over EVERY step, not only logged
+    rows: a schedule whose delays differ exactly on log-interval steps must
+    not bias the realized-vs-nominal check (pre-PR 5 the accumulator only
+    saw log rows and would report 4.0 here instead of 1.75)."""
+    from repro.engine import EngineConfig, Trainer, build_engine
+    from repro.optim import sgd
+
+    def loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    p = 2
+    # Delay 3 exactly on the logged steps (t = 3, 7 at log_every=4), 0
+    # elsewhere: mean over ALL 8 steps is 6/8 = 0.75.
+    table = np.array([[0, 0], [0, 0], [0, 0], [3, 3]], np.int32)
+    eng = build_engine(loss, sgd(0.05), EngineConfig(
+        mode="stale-psum", num_workers=p, s=4,
+        delay=delays.Schedule(table)))
+    st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((4,))})
+    x = jax.random.normal(jax.random.PRNGKey(1), (p * 8, 4))
+    res = Trainer(eng).run(iter([(x, x @ jnp.ones(4))] * 8), 8,
+                           state=st, log_every=4)
+    assert res.history[-1]["mean_total_delay"] == pytest.approx(1.75)
+    # ...and the per-row mean_staleness still reflects THAT step's draw.
+    assert res.history[-1]["mean_staleness"] == pytest.approx(3.0)
+
+
 # -- CLI grammar -------------------------------------------------------------
 
 def test_parse_spec_grammar():
@@ -249,3 +279,61 @@ def test_parse_spec_grammar():
         delays.parse_spec("nonsense")
     with pytest.raises(ValueError, match="bad delay spec"):
         delays.parse_spec("constant:notanint")
+
+
+def test_parse_spec_trace_paths_with_colons():
+    """The bound splits off the RIGHT and only when the last segment is an
+    integer — Windows drive letters and URLs stay part of the path
+    (pre-PR 5 any colon in the path made the spec unparseable)."""
+    assert (delays.parse_spec(r"trace:C:\runs\t.jsonl:8")
+            == delays.Trace(r"C:\runs\t.jsonl", bound=8))
+    assert (delays.parse_spec(r"trace:C:\runs\t.jsonl", s=4)
+            == delays.Trace(r"C:\runs\t.jsonl", bound=4))
+    assert (delays.parse_spec("trace:http://host:8080/t.jsonl", s=2)
+            == delays.Trace("http://host:8080/t.jsonl", bound=2))
+    assert (delays.parse_spec("trace:/tmp/x.jsonl")
+            == delays.Trace("/tmp/x.jsonl", bound=None))
+    with pytest.raises(ValueError, match="path"):
+        delays.parse_spec("trace:")
+    with pytest.raises(ValueError, match="path"):
+        delays.parse_spec("trace::5")
+
+
+def test_parse_spec_round_trip_matrix():
+    """Every spec kind x edge args x s=0: any staleness parameter that
+    resolves to 0 parses to the explicit Zero() spec (pre-PR 5 `geometric`
+    at s=0 still emitted delays up to trunc=1, and multipod's inter_s=0
+    became UniformDelay(0) while intra_s=0 became Zero())."""
+    cases = [
+        ("uniform", dict(s=6), delays.Uniform(6)),
+        ("uniform:3", dict(s=0), delays.Uniform(3)),
+        ("uniform:0", dict(s=6), delays.Zero()),
+        ("uniform", dict(s=0), delays.Zero()),
+        ("zero", dict(s=9), delays.Zero()),
+        ("constant:0", {}, delays.Constant(0)),   # an explicit VALUE, kept
+        ("constant:7", {}, delays.Constant(7)),
+        ("geometric", dict(s=0, num_workers=4), delays.Zero()),
+        ("geometric:5", dict(s=0, num_workers=4), delays.Zero()),
+        ("trace:/tmp/x.jsonl:5", {}, delays.Trace("/tmp/x.jsonl", bound=5)),
+    ]
+    for text, kw, want in cases:
+        assert delays.parse_spec(text, **kw) == want, text
+    geo = delays.parse_spec("geometric:5", s=8, num_workers=4)
+    assert isinstance(geo, delays.Geometric) and geo.bound == 5
+    mp = delays.parse_spec("multipod:2:0:0", num_workers=4)
+    assert mp.intra == delays.Zero() and mp.inter == delays.Zero()
+    mp = delays.parse_spec("multipod:2:4", num_workers=4)
+    assert mp.inter == delays.Uniform(4) and mp.intra == delays.Zero()
+    mp = delays.parse_spec("multipod:2:4:2", num_workers=4)
+    assert mp.inter == delays.Uniform(4) and mp.intra == delays.Uniform(2)
+    mp = delays.parse_spec("multipod:2", s=0, num_workers=4)
+    assert mp.inter == delays.Zero() and mp.bound == 0
+    # every parsed sampler realizes and respects its declared bound
+    for text, kw, _ in cases:
+        if text.startswith("trace"):
+            continue
+        spec = delays.parse_spec(text, **kw)
+        src = spec.realize(num_workers=kw.get("num_workers", 1))
+        d = np.asarray(src.delays(jax.random.PRNGKey(0), 0,
+                                  (kw.get("num_workers", 1),)))
+        assert d.min() >= 0 and d.max() <= spec.bound, text
