@@ -22,6 +22,7 @@ BENCH_FILES = {
     "fig5": "experiments/fig5.json",
     "theorem1": "experiments/theorem1.json",
     "engine_step": "experiments/BENCH_engine_step.json",
+    "serving": "experiments/BENCH_serving.json",
 }
 
 
@@ -50,6 +51,23 @@ def refresh_summary(name: str, timestamp: str, result=None,
                       if "sparse_speedup" in r}
             if sparse:
                 headline["sparse_speedups"] = sparse
+    if name == "serving":
+        sweep = (result or {}).get("sweep")
+        if sweep is None and src and os.path.exists(src):
+            with open(src) as f:
+                sweep = json.load(f).get("sweep", [])
+        if sweep:
+            # tokens/s headline next to the engine-step speedups, plus the
+            # staleness span the refresh-period knob covered.
+            best = max(sweep, key=lambda p: p["tokens_per_s"])
+            headline["tokens_per_s"] = best["tokens_per_s"]
+            headline["latency_p50_s"] = best["latency_p50_s"]
+            headline["latency_p99_s"] = best["latency_p99_s"]
+            stale = [p["staleness_mean_steps"] for p in sweep
+                     if p["staleness_mean_steps"] is not None]
+            if stale:
+                headline["staleness_mean_steps_range"] = [min(stale),
+                                                          max(stale)]
     data = {"benches": {}}
     if os.path.exists(out):
         try:
@@ -109,6 +127,8 @@ def main() -> None:
         "engine_step": lambda: __import__(
             "benchmarks.engine_step_bench",
             fromlist=["main"]).main(quick=quick),
+        "serving": lambda: __import__(
+            "benchmarks.serving_bench", fromlist=["main"]).main(quick=quick),
     }
 
     names = args.only.split(",") if args.only else list(suite)

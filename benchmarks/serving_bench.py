@@ -1,0 +1,133 @@
+"""Serving throughput/latency/staleness curve (the repro.serving deliverable).
+
+Sweeps the snapshot-refresh period — the trainer→server staleness knob —
+while a background publisher streams parameter snapshots, and records
+tokens/s, p50/p99 request latency, and the realized parameter staleness of
+served tokens at each setting:
+
+  refresh_every_steps = 0      never refresh (staleness grows unboundedly)
+  refresh_every_steps = 8/1    poll every 8th / every decode step
+
+The publisher is synthetic (a thread republishing perturbed params on a
+fixed period) so the curve isolates SERVING cost: the trainer's compute
+budget isn't part of the measurement, exactly like the engine-step bench
+isolates step cost from data loading. The live-Trainer integration runs in
+the `python -m repro.serving` smoke.
+
+Writes experiments/BENCH_serving.json; `benchmarks/run.py --only serving`
+rolls the tokens/s headline into BENCH_summary.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+
+from repro import treemath as tm
+from repro.checkpoint import checkpoint as ckpt
+from repro.serving import (Server, ServingConfig, synthetic_requests,
+                           uniform_arrivals)
+
+ARCH = "deepseek-7b"
+
+
+class _Publisher(threading.Thread):
+    """Republish perturbed params every ``period_s`` until stopped."""
+
+    def __init__(self, snap_dir: str, params, period_s: float):
+        super().__init__(daemon=True)
+        self.snap_dir, self.params, self.period_s = snap_dir, params, period_s
+        self.stop = threading.Event()
+        self.step = 0
+
+    def run(self) -> None:
+        while not self.stop.is_set():
+            self.step += 1
+            ckpt.save(ckpt.step_path(self.snap_dir, self.step),
+                      tm.tree_scale(self.params, 1.0 + 1e-4 * self.step),
+                      step=self.step,
+                      extra={"published_at": time.time()})
+            ckpt.prune(self.snap_dir, keep_last=4)
+            self.stop.wait(self.period_s)
+
+
+def _serve_point(cfg: ServingConfig, params, snap_dir: str,
+                 refresh_every_steps: int, n_requests: int, gen: int):
+    server = Server(cfg, params=params)
+    # every_steps=0 never swaps params but still MEASURES staleness — the
+    # never-refresh point anchors the top of the curve.
+    server.make_refresher(snap_dir, every_steps=refresh_every_steps)
+    reqs = synthetic_requests(
+        n_requests, cfg.prompt_len, gen, server.api.vocab_real,
+        arrivals=uniform_arrivals(n_requests, 0.01), seed=7)
+    report = server.run(reqs)
+    s = report.summary()
+    return {
+        "refresh_every_steps": refresh_every_steps,
+        "tokens_per_s": s["tokens_per_s"],
+        "latency_p50_s": s["latency_p50_s"],
+        "latency_p99_s": s["latency_p99_s"],
+        "ttft_p50_s": s["ttft_p50_s"],
+        "refreshes": s["refreshes"],
+        "staleness_mean_steps": s["staleness"]["mean_steps_behind"],
+        "staleness_max_steps": s["staleness"]["max_steps_behind"],
+        "param_age_mean_s": s["staleness"]["mean_param_age_s"],
+        "requests": s["requests_completed"],
+        "decode_steps": s["decode_steps"],
+    }
+
+
+def main(quick: bool = True, out: str = "experiments/BENCH_serving.json"):
+    import tempfile
+    n_requests = 8 if quick else 32
+    gen = 16 if quick else 32
+    cfg = ServingConfig(arch=ARCH, reduced=True, slots=4, prompt_len=16,
+                        max_seq=48, page_tokens=8, temperature=0.0, seed=0)
+
+    # Warm the jit caches (and build the publisher's params) once so the
+    # first sweep point isn't charged the compile.
+    warm = Server(cfg)
+    warm.run(synthetic_requests(2, cfg.prompt_len, 2,
+                                warm.api.vocab_real, seed=3))
+    params = warm.params
+
+    snap_dir = tempfile.mkdtemp(prefix="serving_bench_")
+    pub = _Publisher(snap_dir, params, period_s=0.03 if quick else 0.1)
+    pub.start()
+    try:
+        sweep = [_serve_point(cfg, params, snap_dir, k, n_requests, gen)
+                 for k in (0, 8, 1)]
+    finally:
+        pub.stop.set()
+        pub.join(timeout=30)
+
+    result = {
+        "bench": "serving",
+        "quick": quick,
+        "arch": ARCH,
+        "config": {"slots": cfg.slots, "prompt_len": cfg.prompt_len,
+                   "max_seq": cfg.max_seq, "page_tokens": cfg.page_tokens,
+                   "requests": n_requests, "gen": gen,
+                   "publish_period_s": pub.period_s,
+                   "publisher_steps": pub.step},
+        "sweep": sweep,
+    }
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    for pt in sweep:
+        print(f"refresh_every={pt['refresh_every_steps']:>2}: "
+              f"{pt['tokens_per_s']:>7.1f} tok/s  "
+              f"p50 {pt['latency_p50_s']:.3f}s p99 {pt['latency_p99_s']:.3f}s  "
+              f"staleness mean {pt['staleness_mean_steps']} steps "
+              f"(max {pt['staleness_max_steps']}), "
+              f"{pt['refreshes']} refreshes")
+    print(f"wrote {out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -4,12 +4,22 @@ Leaves are flattened with stable path-derived names; metadata (step, config
 digest, sharding spec strings) rides in a JSON side file. On restore with a
 mesh, leaves are device_put with their recorded NamedSharding so a restored
 state resumes with the same layout the dry-run compiled for.
+
+Writes are ATOMIC (serving contract): both files land via write-to-temp +
+``os.replace``, and the meta file is renamed LAST — it is the commit marker.
+A concurrent reader (the serving plane's snapshot refresher) that polls
+``latest_step`` therefore only ever sees fully-written snapshots: the .npz
+is complete before the .meta.json that announces it exists. ``prune`` removes
+the meta first (un-announcing the step) and the .npz second, the exact
+reverse, so the only cross-process race left is a reader holding a step that
+``prune`` deletes under it — readers handle that as ``FileNotFoundError``
+and fall back to the next poll.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
@@ -26,11 +36,26 @@ def _leaf_names(tree: Pytree):
     return names, leaves
 
 
+def _npz_path(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _atomic_replace(tmp: str, dst: str) -> None:
+    os.replace(tmp, dst)  # same-directory rename: atomic on POSIX and NT
+
+
 def save(path: str, tree: Pytree, step: int = 0, extra: Optional[dict] = None) -> None:
     names, leaves = _leaf_names(tree)
     arrays = {f"leaf_{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    npz = _npz_path(path)
+    os.makedirs(os.path.dirname(os.path.abspath(npz)), exist_ok=True)
+    # np.savez on a file OBJECT (a string would get ".npz" appended to the
+    # temp name); temp files live in the target dir so os.replace never
+    # crosses a filesystem boundary.
+    tmp = npz + f".tmp-{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    _atomic_replace(tmp, npz)
     meta = {
         "step": int(step),
         "names": names,
@@ -40,14 +65,17 @@ def save(path: str, tree: Pytree, step: int = 0, extra: Optional[dict] = None) -
         ],
         "extra": extra or {},
     }
-    with open(_meta_path(path), "w") as f:
+    mtmp = _meta_path(path) + f".tmp-{os.getpid()}"
+    with open(mtmp, "w") as f:
         json.dump(meta, f, indent=1)
+    _atomic_replace(mtmp, _meta_path(path))  # commit marker lands last
 
 
 def restore(path: str, like: Pytree, shardings: Optional[Pytree] = None):
-    """Restore into the structure of ``like``; optionally device_put each leaf
-    with the matching leaf of ``shardings``. Returns (tree, step, extra)."""
-    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Restore into the structure of ``like`` (arrays, tracers, or
+    ShapeDtypeStructs — only the treedef is used); optionally device_put each
+    leaf with the matching leaf of ``shardings``. Returns (tree, step, extra)."""
+    npz = np.load(_npz_path(path))
     with open(_meta_path(path)) as f:
         meta = json.load(f)
     names, like_leaves = _leaf_names(like)
@@ -64,14 +92,44 @@ def restore(path: str, like: Pytree, shardings: Optional[Pytree] = None):
     return tree, meta["step"], meta["extra"]
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def steps_in(ckpt_dir: str) -> List[int]:
+    """COMMITTED snapshot steps in ``ckpt_dir``, ascending. A step counts
+    only when both its .npz and its .meta.json exist — the meta file is
+    written last (see ``save``), so an in-flight publish is invisible."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for f in os.listdir(ckpt_dir):
         if f.startswith("step_") and f.endswith(".npz"):
-            steps.append(int(f[len("step_"):-len(".npz")]))
-    return max(steps) if steps else None
+            stem = f[len("step_"):-len(".npz")]
+            if not stem.isdigit():
+                continue
+            if os.path.exists(_meta_path(os.path.join(ckpt_dir, f))):
+                steps.append(int(stem))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = steps_in(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def prune(ckpt_dir: str, keep_last: int) -> List[int]:
+    """Delete all but the newest ``keep_last`` committed snapshots so
+    publisher runs don't grow unboundedly. Removes each victim's meta FIRST
+    (de-listing it from ``latest_step``) and its .npz second — the reverse
+    of the publish order. Returns the pruned steps."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    victims = steps_in(ckpt_dir)[:-keep_last]
+    for step in victims:
+        path = step_path(ckpt_dir, step)
+        for p in (_meta_path(path), _npz_path(path)):
+            try:
+                os.remove(p)
+            except FileNotFoundError:  # concurrent pruner — already gone
+                pass
+    return victims
 
 
 def step_path(ckpt_dir: str, step: int) -> str:

@@ -126,14 +126,21 @@ class CoherenceHook(Hook):
 
 
 class CheckpointHook(Hook):
-    """Save the engine's eval params every ``every`` steps (npz + metadata)."""
+    """Save the engine's eval params every ``every`` steps (npz + metadata).
 
-    def __init__(self, ckpt_dir: str, every: int, extra: Optional[dict] = None):
+    Saves are atomic (see ``checkpoint.save``), so a serving-plane refresher
+    may poll the directory while training runs. ``keep_last`` prunes older
+    snapshots after each save so long runs don't grow unboundedly.
+    """
+
+    def __init__(self, ckpt_dir: str, every: int, extra: Optional[dict] = None,
+                 keep_last: Optional[int] = None):
         from repro.checkpoint import checkpoint as ckpt
         self._ckpt = ckpt
         self.ckpt_dir = ckpt_dir
         self.every = max(every, 1)
         self.extra = extra or {}
+        self.keep_last = keep_last
 
     def on_step(self, ctx: StepContext) -> None:
         if (ctx.step + 1) % self.every:
@@ -141,6 +148,8 @@ class CheckpointHook(Hook):
         self._ckpt.save(self._ckpt.step_path(self.ckpt_dir, ctx.step + 1),
                         ctx.engine.params(ctx.state), step=ctx.step + 1,
                         extra=self.extra)
+        if self.keep_last:
+            self._ckpt.prune(self.ckpt_dir, self.keep_last)
 
 
 class StdoutSink(Hook):

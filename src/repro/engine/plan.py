@@ -463,6 +463,79 @@ def plan_decode(arch: Union[str, ArchDef], shape: ShapeLike, mesh,
     )
 
 
+def plan_serve_step(arch: Union[str, ArchDef], shape: ShapeLike, mesh, *,
+                    layout, num_pages: int,
+                    overrides: Optional[dict] = None,
+                    reduced: bool = False) -> Plan:
+    """Continuous-batching decode step for the serving plane.
+
+    One jitted call advances every occupied slot by one token against the
+    paged cache (``repro.serving.cache.PageLayout`` — passed duck-typed to
+    keep the planner model-agnostic): page-table gather -> per-slot batch-1
+    ``api.decode`` under ``vmap`` (each slot carries its own position, which
+    the shared-scalar-``pos`` decode contract can't express batch-wide) ->
+    cursor-addressed page scatter. Slots excluded by ``mask`` still occupy
+    lanes but are inert: their sampled token is discarded and their cache
+    write is routed to the null page, so membership changes between steps
+    never retrace. The page and resident buffers are donated — the cache is
+    updated in place like the engine's gradient ring.
+
+    ``shape.global_batch`` is the slot count; ``temp`` <= 0 selects greedy
+    argmax, > 0 temperature sampling (one fold-in key per slot).
+    """
+    arch, shape, api = _resolve(arch, shape, reduced, overrides)
+    assert shape.kind == "decode", shape.name
+    rules = rules_lib.rules_for_arch(arch.arch_id, shape=shape, mesh=mesh)
+    slots = shape.global_batch
+
+    params_shapes, params_axes = captured_axes(api.init)
+    params_sh = _shardings(params_axes, mesh, rules)
+    rep = _replicated(mesh)
+
+    f32, i32 = jnp.float32, jnp.int32
+    pages_struct = jax.ShapeDtypeStruct(
+        (num_pages + 1, layout.page_tokens, layout.width), f32)
+    res_struct = jax.ShapeDtypeStruct((slots, layout.res_width), f32)
+    tables_struct = jax.ShapeDtypeStruct(
+        (slots, max(layout.pages_per_slot, 1)), i32)
+    vec = lambda dt: jax.ShapeDtypeStruct((slots,), dt)
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    temp_struct = jax.ShapeDtypeStruct((), f32)
+
+    def serve_step(params, pages, resident, tables, tokens, pos, mask, key,
+                   temp):
+        cache = layout.gather(pages, resident, tables)   # [S, ...] leaves
+        keys = jax.random.split(key, slots)
+
+        def one(tok, slot_cache, p, k):
+            logits, new_cache = api.decode(params, tok[None, None],
+                                           slot_cache, p)
+            logits = logits[0, -1].astype(jnp.float32)
+            greedy = jnp.argmax(logits).astype(i32)
+            sampled = jax.random.categorical(
+                k, logits / jnp.maximum(temp, 1e-6)).astype(i32)
+            return jnp.where(temp > 0.0, sampled, greedy), new_cache
+
+        next_tok, new_caches = jax.vmap(one)(tokens, cache, pos, keys)
+        pages, resident = layout.scatter_token(
+            pages, resident, new_caches, tables, pos, mask)
+        return jnp.where(mask, next_tok, tokens), pages, resident
+
+    return Plan(
+        fn=serve_step,
+        args=(params_shapes, pages_struct, res_struct, tables_struct,
+              vec(i32), vec(i32), vec(jnp.bool_), key_struct, temp_struct),
+        in_shardings=(params_sh, rep, rep, rep, rep, rep, rep, rep, rep),
+        out_shardings=(rep, rep, rep),
+        donate_argnums=(1, 2),
+        meta={"arch": arch.arch_id, "shape": shape.name, "kind": "serve",
+              "slots": slots, "seq_len": shape.seq_len,
+              "cache_tokens": layout.tokens,
+              "page_tokens": layout.page_tokens,
+              "pages": num_pages, "resident_width": layout.res_width},
+    )
+
+
 def build(arch_id: str, shape_name: str, mesh, *,
           stale_s: Optional[int] = None, mode: Optional[str] = None,
           optimizer_name: Optional[str] = None,

@@ -1,108 +1,96 @@
-"""Serving driver: batched prefill + decode for any registered architecture,
-through the engine's mesh-aware sharding plans (``repro/engine/plan.py``) —
-the same planning layer the dry-run lowers and the trainer executes.
+"""Serving driver — a thin client over the ``repro.serving`` request plane.
+
+What used to be a one-shot batched prefill+decode loop now feeds the same
+requests through the real server: admission queue, continuous batching at
+``--batch`` slots, the packed paged decode-cache, and (optionally) live
+parameter refresh from a training run's snapshot directory.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --reduced \
-      --batch 8 --prompt-len 64 --gen 32 [--mesh 1x1]
+      --batch 8 --prompt-len 64 --gen 32 [--mesh 1x1] \
+      [--params CKPT_DIR [--refresh-every N]] [--greedy]
+
+``--params CKPT_DIR`` serves from the latest committed snapshot (restored
+with the decode plan's shardings); ``--refresh-every N`` keeps polling that
+directory every N decode steps and hot-swaps newer snapshots mid-stream,
+reporting the realized parameter staleness of the served tokens.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
-from repro.configs.base import InputShape
-from repro.engine import plan as planlib
-from repro.launch import mesh as meshlib
+from repro.serving import Request, Server, ServingConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="continuous-batch width (serving slots)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--greedy", action="store_true",
+                    help="argmax decoding (same as --temperature 0)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="1x1",
                     help="host mesh 'DATAxMODEL' the plans shard over")
+    ap.add_argument("--params", default=None, metavar="CKPT_DIR",
+                    help="serve from the latest committed snapshot instead "
+                         "of fresh-init params")
+    ap.add_argument("--refresh-every", type=int, default=0, metavar="N",
+                    help="with --params: hot-swap newer snapshots every N "
+                         "decode steps (0 = serve one snapshot)")
+    ap.add_argument("--page-tokens", type=int, default=8)
     args = ap.parse_args()
 
-    arch = cfglib.get(args.arch)
-    api = arch.api(reduced=args.reduced)
-    cfg = api.cfg
-    mesh = meshlib.parse_host_mesh(args.mesh)
-    params, _ = api.init(jax.random.PRNGKey(args.seed))
+    cfg = ServingConfig(
+        arch=args.arch, reduced=args.reduced, slots=args.batch,
+        prompt_len=args.prompt_len, max_seq=args.prompt_len + args.gen,
+        page_tokens=args.page_tokens,
+        temperature=0.0 if args.greedy else args.temperature,
+        seed=args.seed, mesh=args.mesh)
+    server = Server(cfg)
+    api = server.api
+    mcfg = api.cfg
+
+    base_step = 0
+    if args.params:
+        base_step = server.restore_params(args.params)
+        print(f"serving snapshot step {base_step} from {args.params}")
+        if args.refresh_every:
+            server.make_refresher(args.params,
+                                  every_steps=args.refresh_every,
+                                  base_step=base_step)
 
     rng = np.random.default_rng(args.seed)
-    total = args.prompt_len + args.gen
-    tokens = jnp.asarray(rng.integers(0, api.vocab_real,
-                                      (args.batch, args.prompt_len), dtype=np.int32))
-    batch = {"tokens": tokens}
-    if getattr(cfg, "num_cross_layers", 0) and api.family == "transformer":
-        batch["cross_feats"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.cross_tokens, cfg.cross_dim)).astype(np.float32))
-    if api.family == "encdec":
-        batch["frames"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.num_frames, cfg.d_model)).astype(np.float32))
+    reqs = []
+    for rid in range(args.batch):
+        features = {}
+        if getattr(mcfg, "num_cross_layers", 0) and api.family == "transformer":
+            features["cross_feats"] = rng.standard_normal(
+                (1, mcfg.cross_tokens, mcfg.cross_dim)).astype(np.float32)
+        if api.family == "encdec":
+            features["frames"] = rng.standard_normal(
+                (1, mcfg.num_frames, mcfg.d_model)).astype(np.float32)
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, api.vocab_real,
+                                (args.prompt_len,)).astype(np.int32),
+            max_new_tokens=args.gen, features=features or None))
 
-    # Plan both steps on the mesh: prefill at the prompt length, decode
-    # against a cache sized for the full request.
-    pplan = planlib.plan_prefill(
-        arch, InputShape("serve_prefill", args.prompt_len, args.batch,
-                         "prefill"), mesh, reduced=args.reduced)
-    dplan = planlib.plan_decode(
-        arch, InputShape("serve_decode", total, args.batch, "decode"),
-        mesh, reduced=args.reduced)
-    prefill = pplan.jit()
-    decode = dplan.jit()
-
-    # Prefill into a cache sized for the full request.
-    t0 = time.time()
-    cache_full, _ = api.init_cache(args.batch, total)
-    logits, cache = prefill(params, batch)
-
-    def graft(dst, src):
-        if isinstance(dst, dict):
-            return {k: graft(dst[k], src[k]) for k in dst}
-        if dst.shape == src.shape:
-            return src
-        sl = tuple(slice(0, d) for d in src.shape)
-        return jnp.asarray(dst).at[sl].set(src)
-
-    try:
-        cache = graft(cache_full, cache)
-    except Exception:
-        pass  # SSM caches are length-independent
-    prefill_s = time.time() - t0
-    print(f"prefill: {args.batch}x{args.prompt_len} tokens in {prefill_s:.2f}s "
-          f"({args.batch*args.prompt_len/prefill_s:.0f} tok/s)")
-
-    key = jax.random.PRNGKey(args.seed)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    generated = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.int32(args.prompt_len + i)
-        logits, cache = decode(params, tok, cache, pos)
-        key, k = jax.random.split(key)
-        if args.temperature > 0:
-            tok = jax.random.categorical(
-                k, logits[:, 0] / args.temperature)[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    dec_s = time.time() - t0
-    out = jnp.concatenate(generated, axis=1)
-    print(f"decode: {args.gen} steps x batch {args.batch} in {dec_s:.2f}s "
-          f"({args.batch*args.gen/dec_s:.0f} tok/s)")
-    print("sample row 0:", np.asarray(out[0])[:24].tolist())
+    report = server.run(reqs)
+    summary = report.summary()
+    print(json.dumps(summary, indent=1))
+    print(f"decode: {summary['tokens_total']} tokens over "
+          f"{report.decode_steps} continuous-batch steps "
+          f"({summary['tokens_per_s']} tok/s)")
+    first = min(report.completed, key=lambda r: r.rid)
+    print("sample row 0:", first.tokens[:24])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""repro.serving — async request serving with live trainer-snapshot refresh.
+
+The inference-side staleness story: a continuous-batching server
+(``server.Server``) drains an admission queue (``queue``) through a packed
+paged decode-cache (``cache``), hot-swapping parameters from a concurrently
+training ``Trainer``'s published snapshots (``snapshot``) and stamping every
+served token with its realized parameter staleness — steps behind the
+freshest snapshot and wall-clock age — so trainer→server lag is a measured
+knob, like the engine's gradient staleness.
+
+Smoke: ``PYTHONPATH=src python -m repro.serving``.
+"""
+from repro.serving.batcher import ContinuousBatcher, SlotState
+from repro.serving.cache import PagedDecodeCache, PageLayout, build_layout
+from repro.serving.queue import (AdmissionQueue, Clock, Request,
+                                 burst_arrivals, poisson_arrivals,
+                                 synthetic_requests, uniform_arrivals)
+from repro.serving.server import (Server, ServeReport, ServedRequest,
+                                  ServingConfig)
+from repro.serving.snapshot import SnapshotPublisherHook, SnapshotRefresher
+
+__all__ = [
+    "AdmissionQueue", "Clock", "ContinuousBatcher", "PagedDecodeCache",
+    "PageLayout", "Request", "ServeReport", "ServedRequest", "Server",
+    "ServingConfig", "SlotState", "SnapshotPublisherHook",
+    "SnapshotRefresher", "build_layout", "burst_arrivals",
+    "poisson_arrivals", "synthetic_requests", "uniform_arrivals",
+]

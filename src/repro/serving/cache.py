@@ -1,0 +1,268 @@
+"""Packed paged decode-cache: every slot's cache pages in ONE flat array.
+
+The serving plane holds one *batch-1 model cache per slot* so requests with
+different positions can share a decode step (the step vmaps ``api.decode``
+over slots). Naively that is a pytree of per-slot arrays that must be
+re-stacked whenever a request joins or leaves. Instead we reuse the packed
+[D]-view machinery the engine hot path runs on (``treemath.tree_pack`` /
+``PackSpec``, the same substrate as ``kernels/dispatch``):
+
+* Each cache leaf is rotated **token-major** (``treemath.tree_moveaxis``)
+  and packed, so one ring row ``[W]`` holds everything the model keeps for
+  one cache token of one slot. The token axis is *detected*, not assumed:
+  ``init_cache`` is probed (abstractly) at two sequence lengths and the axis
+  that stretches is the token axis — transformer K/V rings and ``slot_pos``
+  page naturally; length-independent leaves (SSM recurrent state, enc-dec
+  cross K/V, window-capped rings probed past their cap) fall back to a
+  per-slot "resident" row that is rewritten wholesale each step.
+* Rows are grouped into fixed-size **pages** of ``page_tokens`` rows, and
+  all pages of all slots live in ONE ``[num_pages + 1, page_tokens, W]``
+  array. A slot's pages need not be contiguous: a host-side page table maps
+  (slot, page-slot) -> page id, and a LIFO free list hands pages straight
+  from an evicted request to the next admission.
+* Index ``num_pages`` is the **null page**: evicted slots point there, and
+  the decode step routes masked slots' writes there too, so a freed page can
+  be re-allocated while the old slot is still in the batch mask without the
+  stale lane scribbling on it.
+
+Decode writes are cursor-addressed exactly like the model's own ring cache
+and the engine's pending ring: position ``p`` lives in row ``p % tokens``,
+so each decode step rewrites ONE page per active slot (the page holding the
+cursor row), not the whole cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import treemath as tm
+from repro.kernels import dispatch
+
+Pytree = Any
+
+# Abstract probe lengths for token-axis detection. Small enough that even a
+# window-capped ring still stretches between them (any swa window >= 3), and
+# eval_shape allocates nothing.
+_PROBE_A, _PROBE_B = 2, 3
+
+
+def _detect_token_axes(api) -> Tuple[Any, List[Optional[int]]]:
+    """(treedef, per-leaf token axis or None) for ``api.init_cache`` leaves."""
+    a = jax.eval_shape(lambda: api.init_cache(1, _PROBE_A)[0])
+    b = jax.eval_shape(lambda: api.init_cache(1, _PROBE_B)[0])
+    leaves_a, treedef = jax.tree.flatten(a)
+    leaves_b = jax.tree.leaves(b)
+    axes: List[Optional[int]] = []
+    for xa, xb in zip(leaves_a, leaves_b):
+        if len(xa.shape) != len(xb.shape):
+            raise ValueError(f"cache leaf rank changed with seq_len: {xa} vs {xb}")
+        diff = [i for i, (m, n) in enumerate(zip(xa.shape, xb.shape)) if m != n]
+        if len(diff) > 1:
+            raise ValueError(f"cache leaf has several seq-dependent axes: {xa} vs {xb}")
+        axes.append(diff[0] if diff else None)
+    return treedef, axes
+
+
+@dataclasses.dataclass(frozen=True)
+class PageLayout:
+    """Static token-major packing layout of one arch's decode cache."""
+    treedef: Any
+    token_axes: Tuple[Optional[int], ...]   # per flattened leaf; None = resident
+    tok_spec: Optional[tm.PackSpec]         # over token-major leaves (lead [C])
+    res_spec: tm.PackSpec                   # over length-independent leaves
+    tokens: int                             # C: ring rows per slot (0 if none)
+    page_tokens: int                        # T: rows per page
+    pages_per_slot: int
+    width: int                              # W: packed floats per token row
+    res_width: int
+    empty_rows: Optional[jax.Array]         # [C, W] packed init_cache rows
+    empty_res: jax.Array                    # [res_width]
+
+    @property
+    def has_tokens(self) -> bool:
+        return self.tokens > 0
+
+    @property
+    def padded_tokens(self) -> int:
+        return self.pages_per_slot * self.page_tokens
+
+    # -- pack / unpack (jit-safe; ``lead`` extra leading axes, e.g. slots) --
+
+    def pack_rows(self, cache: Pytree, lead: int = 0):
+        """cache pytree -> (rows [*lead, C, W] or None, res [*lead, res_width])."""
+        moved = tm.tree_moveaxis(cache, self.token_axes, 0, lead_ndim=lead)
+        leaves = jax.tree.leaves(moved)
+        tok = [x for x, ax in zip(leaves, self.token_axes) if ax is not None]
+        res = [x for x, ax in zip(leaves, self.token_axes) if ax is None]
+        rows = tm.tree_pack(tok, lead_ndim=lead + 1) if tok else None
+        lead_shape = leaves[0].shape[:lead] if leaves else ()
+        res_vec = (tm.tree_pack(res, lead_ndim=lead) if res
+                   else jnp.zeros(lead_shape + (0,), jnp.float32))
+        return rows, res_vec
+
+    def unpack_slots(self, rows: Optional[jax.Array], res: jax.Array,
+                     lead: int = 1) -> Pytree:
+        """Inverse of :meth:`pack_rows`: rebuild the cache pytree."""
+        tok = tm.tree_unpack(rows, self.tok_spec) if self.tok_spec else []
+        res_leaves = tm.tree_unpack(res, self.res_spec)
+        tok_it, res_it = iter(tok), iter(res_leaves)
+        leaves = []
+        for ax in self.token_axes:
+            if ax is None:
+                leaves.append(next(res_it))
+            else:  # [*lead, C, *rest] -> token axis back in place
+                leaves.append(jnp.moveaxis(next(tok_it), lead, lead + ax))
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- the two device-side page ops the serve step uses -------------------
+
+    def gather(self, pages: jax.Array, resident: jax.Array,
+               tables: jax.Array) -> Pytree:
+        """Page-table gather -> slot-stacked cache pytree ([S, ...] leaves)."""
+        rows = None
+        if self.has_tokens:
+            views = pages[tables]                       # [S, PPS, T, W]
+            rows = views.reshape(tables.shape[0], -1, self.width)
+            rows = rows[:, : self.tokens]
+        return self.unpack_slots(rows, resident, lead=1)
+
+    def scatter_token(self, pages: jax.Array, resident: jax.Array,
+                      caches: Pytree, tables: jax.Array, pos: jax.Array,
+                      mask: jax.Array):
+        """Write one decode step's cache updates back into the page array.
+
+        Cursor addressing: only the page holding ring row ``pos % tokens`` is
+        written per slot (decode touches exactly that row; the page's other
+        rows round-trip unchanged). Masked slots are routed to the null page
+        so their (garbage) lanes cannot clobber re-allocated pages."""
+        rows, res = self.pack_rows(caches, lead=1)       # [S, C, W], [S, Wr]
+        if self.has_tokens:
+            S = tables.shape[0]
+            row = pos % self.tokens
+            pslot = row // self.page_tokens              # [S] page-slot index
+            pad = self.padded_tokens - self.tokens
+            if pad:
+                rows = jnp.pad(rows, ((0, 0), (0, pad), (0, 0)))
+            paged = rows.reshape(S, self.pages_per_slot, self.page_tokens,
+                                 self.width)
+            written = paged[jnp.arange(S), pslot]        # [S, T, W]
+            ids = tables[jnp.arange(S), pslot]
+            ids = jnp.where(mask, ids, pages.shape[0] - 1)
+            pages = pages.at[ids].set(written)
+        if self.res_width:
+            resident = jnp.where(mask[:, None], res, resident)
+        return pages, resident
+
+
+def build_layout(api, max_seq: int, page_tokens: int = 8) -> PageLayout:
+    """Derive the packing layout (and packed empty-cache template) for
+    ``api``'s decode cache at capacity ``max_seq``."""
+    treedef, axes = _detect_token_axes(api)
+    template = api.init_cache(1, max_seq)[0]
+    t_def = jax.tree.structure(template)
+    if t_def != treedef:
+        raise ValueError(f"init_cache treedef changed with seq_len: {t_def} vs {treedef}")
+    moved = tm.tree_moveaxis(template, axes, 0)
+    leaves = jax.tree.leaves(moved)
+    tok = [x for x, ax in zip(leaves, axes) if ax is not None]
+    res = [x for x, ax in zip(leaves, axes) if ax is None]
+    c_sizes = {x.shape[0] for x in tok}
+    if len(c_sizes) > 1:
+        raise ValueError(f"token axes disagree on ring length: {sorted(c_sizes)}")
+    tokens = c_sizes.pop() if c_sizes else 0
+    page_tokens = max(1, min(page_tokens, tokens) if tokens else 1)
+    tok_spec = tm.pack_spec(tok, lead_ndim=1) if tok else None
+    res_spec = tm.pack_spec(res, lead_ndim=0)
+    dispatch.note("serve_cache", "packed" if tok else "resident",
+                  f"C={tokens} T={page_tokens} W={tok_spec.total if tok_spec else 0}")
+    return PageLayout(
+        treedef=treedef, token_axes=tuple(axes),
+        tok_spec=tok_spec, res_spec=res_spec,
+        tokens=tokens, page_tokens=page_tokens,
+        pages_per_slot=math.ceil(tokens / page_tokens) if tokens else 0,
+        width=tok_spec.total if tok_spec else 0,
+        res_width=res_spec.total,
+        empty_rows=tm.tree_pack(tok, lead_ndim=1) if tok else None,
+        empty_res=(tm.tree_pack(res) if res
+                   else jnp.zeros((0,), jnp.float32)),
+    )
+
+
+class PagedDecodeCache:
+    """Host-side page accounting + the device arrays the serve step runs on.
+
+    The device state is two arrays — ``pages [num_pages + 1, T, W]`` (last
+    index = null page) and ``resident [slots, res_width]`` — both donated by
+    the jitted step. Page tables and the free list are plain numpy/python:
+    they change only on join/evict, between steps.
+    """
+
+    def __init__(self, layout: PageLayout, slots: int,
+                 num_pages: Optional[int] = None):
+        pps = layout.pages_per_slot
+        self.layout, self.slots = layout, slots
+        self.num_pages = slots * pps if num_pages is None else num_pages
+        if pps and self.num_pages < pps:
+            raise ValueError(
+                f"num_pages={self.num_pages} cannot hold one slot ({pps} pages)")
+        self.pages = jnp.zeros(
+            (self.num_pages + 1, layout.page_tokens, layout.width), jnp.float32)
+        self.resident = jnp.tile(layout.empty_res[None], (slots, 1))
+        self.tables = np.full((slots, max(pps, 1)), self.null_page, np.int32)
+        self.free_list: List[int] = list(range(self.num_pages))
+
+    @property
+    def null_page(self) -> int:
+        return self.num_pages
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free_list)
+
+    def can_alloc(self) -> bool:
+        return len(self.free_list) >= self.layout.pages_per_slot
+
+    def alloc(self, slot: int) -> Sequence[int]:
+        """Claim pages for ``slot`` from the free list (LIFO: the most
+        recently evicted request's pages are reused first)."""
+        if (self.tables[slot] != self.null_page).any():
+            raise ValueError(f"slot {slot} already holds pages")
+        pps = self.layout.pages_per_slot
+        if len(self.free_list) < pps:
+            raise ValueError(f"page pool exhausted ({len(self.free_list)} < {pps})")
+        got = [self.free_list.pop() for _ in range(pps)]
+        if pps:
+            self.tables[slot] = np.asarray(got, np.int32)
+        return got
+
+    def free(self, slot: int) -> Sequence[int]:
+        """Return ``slot``'s pages to the free list; its table row now points
+        at the null page, so in-flight masked writes land harmlessly."""
+        row = self.tables[slot]
+        got = [int(p) for p in row if p != self.null_page]
+        self.free_list.extend(got)
+        self.tables[slot] = self.null_page
+        return got
+
+    def write_rows(self, slot: int, rows: Optional[jax.Array],
+                   res: jax.Array) -> None:
+        """Write a full slot image (admission/graft path): all of the slot's
+        pages, plus its resident row."""
+        lay = self.layout
+        if lay.has_tokens:
+            pad = lay.padded_tokens - rows.shape[0]
+            if pad:
+                rows = jnp.pad(rows, ((0, pad), (0, 0)))
+            ids = jnp.asarray(self.tables[slot])
+            self.pages = self.pages.at[ids].set(
+                rows.reshape(lay.pages_per_slot, lay.page_tokens, lay.width))
+        if lay.res_width:
+            self.resident = self.resident.at[slot].set(res)
+
+    def table_device(self) -> jax.Array:
+        return jnp.asarray(self.tables)

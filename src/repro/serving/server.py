@@ -1,0 +1,318 @@
+"""The serving runtime loop: admission -> prefill/join -> continuous decode.
+
+One :class:`Server` owns the three planned steps (``plan_prefill`` for
+admissions, ``plan_serve_step`` for the continuous batch, both mesh-aware)
+plus the paged cache and the batcher. The loop per iteration:
+
+1. **refresh** — swap in newer trainer-published params (snapshot.py),
+2. **expire** — reject queued requests whose deadline already passed,
+3. **admit**  — while a slot AND pages are free: prefill the next arrived
+   request (batch-1), pack its cache token-major, graft it onto the empty
+   ring template, write the slot's pages, join the batch,
+4. **decode** — one jitted step over all slots (masked lanes inert),
+5. **harvest** — append each active slot's token, stamp it with the realized
+   parameter staleness, evict finished / past-deadline requests (their pages
+   return to the free list for the next admission).
+
+The decode step never retraces on membership changes: joins and evicts only
+flip mask bits and rewrite pages between steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfglib
+from repro.configs.base import InputShape
+from repro.engine import plan as planlib
+from repro.launch import mesh as meshlib
+from repro.serving.batcher import ContinuousBatcher, SlotState
+from repro.serving.cache import PagedDecodeCache, build_layout
+from repro.serving.queue import AdmissionQueue, Clock, Request
+from repro.serving.snapshot import SnapshotRefresher
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    arch: str = "deepseek-7b"
+    reduced: bool = True
+    overrides: Optional[dict] = None
+    slots: int = 4                    # continuous-batch width
+    prompt_len: int = 16              # admission prefill length (pad/trunc)
+    max_seq: int = 64                 # decode-cache capacity per slot
+    page_tokens: int = 8              # ring rows per page
+    num_pages: Optional[int] = None   # default: slots * pages_per_slot
+    temperature: float = 0.0          # <= 0 -> greedy argmax
+    seed: int = 0
+    mesh: str = "1x1"                 # host mesh "DATAxMODEL"
+    virtual_dt: Optional[float] = None  # fixed seconds/step clock for tests
+
+
+@dataclasses.dataclass
+class ServedRequest:
+    rid: int
+    tokens: List[int]
+    reason: str                       # "done" | "deadline"
+    arrival_s: float
+    join_s: float
+    finish_s: float
+    ttft_s: float
+    # per-token realized parameter staleness: (publisher steps behind,
+    # seconds since the served params were published); (0, None) without a
+    # refresher / before the first publish.
+    staleness: List[Tuple[int, Optional[float]]]
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class ServeReport:
+    completed: List[ServedRequest]
+    expired_rids: List[int]
+    wall_s: float
+    decode_steps: int
+    joins: int
+    evicts: int
+    refreshes: int
+
+    @property
+    def tokens_total(self) -> int:
+        return sum(len(r.tokens) for r in self.completed)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_total / self.wall_s if self.wall_s > 0 else 0.0
+
+    def _latency(self, q: float) -> Optional[float]:
+        lats = [r.latency_s for r in self.completed]
+        return float(np.percentile(lats, q)) if lats else None
+
+    def staleness_summary(self) -> Dict[str, Optional[float]]:
+        steps = [s for r in self.completed for s, _ in r.staleness]
+        ages = [a for r in self.completed for _, a in r.staleness
+                if a is not None]
+        return {
+            "mean_steps_behind": float(np.mean(steps)) if steps else None,
+            "max_steps_behind": int(np.max(steps)) if steps else None,
+            "mean_param_age_s": float(np.mean(ages)) if ages else None,
+        }
+
+    def summary(self) -> dict:
+        ttfts = [r.ttft_s for r in self.completed]
+        return {
+            "requests_completed": len(self.completed),
+            "requests_expired": len(self.expired_rids),
+            "tokens_total": self.tokens_total,
+            "tokens_per_s": round(self.tokens_per_s, 1),
+            "wall_s": round(self.wall_s, 3),
+            "decode_steps": self.decode_steps,
+            "joins": self.joins,
+            "evicts": self.evicts,
+            "refreshes": self.refreshes,
+            "ttft_p50_s": (round(float(np.percentile(ttfts, 50)), 4)
+                           if ttfts else None),
+            "latency_p50_s": (round(self._latency(50), 4)
+                              if self.completed else None),
+            "latency_p99_s": (round(self._latency(99), 4)
+                              if self.completed else None),
+            "staleness": self.staleness_summary(),
+        }
+
+
+class Server:
+    """Continuous-batching request server over one architecture."""
+
+    def __init__(self, cfg: ServingConfig, params: Optional[Pytree] = None,
+                 refresher: Optional[SnapshotRefresher] = None):
+        self.cfg = cfg
+        self.arch = cfglib.get(cfg.arch)
+        self.api = self.arch.api(reduced=cfg.reduced, overrides=cfg.overrides)
+        self.mesh = meshlib.parse_host_mesh(cfg.mesh)
+        self.layout = build_layout(self.api, cfg.max_seq, cfg.page_tokens)
+
+        self._pshape = InputShape("serve_prefill", cfg.prompt_len, 1, "prefill")
+        dshape = InputShape("serve_decode", cfg.max_seq, cfg.slots, "decode")
+        self.pplan = planlib.plan_prefill(
+            self.arch, self._pshape, self.mesh, overrides=cfg.overrides,
+            reduced=cfg.reduced)
+        self.cache = PagedDecodeCache(self.layout, cfg.slots, cfg.num_pages)
+        self.splan = planlib.plan_serve_step(
+            self.arch, dshape, self.mesh, layout=self.layout,
+            num_pages=self.cache.num_pages, overrides=cfg.overrides,
+            reduced=cfg.reduced)
+        self._prefill = self.pplan.jit()
+        self._step = self.splan.jit()
+
+        if params is None:
+            params, _ = self.api.init(jax.random.PRNGKey(cfg.seed))
+        self.params = params
+        self.refresher = refresher
+        self.batcher = ContinuousBatcher(cfg.slots)
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self.decode_steps = 0
+
+    # -- params plumbing -----------------------------------------------------
+
+    @property
+    def params_struct(self) -> Pytree:
+        return self.pplan.args[0]
+
+    @property
+    def params_shardings(self) -> Pytree:
+        return self.pplan.in_shardings[0]
+
+    def restore_params(self, ckpt_dir: str) -> int:
+        """Serve from the latest committed snapshot in ``ckpt_dir`` (restored
+        with the plan's shardings). Returns the snapshot step."""
+        from repro.checkpoint import checkpoint as ckpt
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed snapshot in {ckpt_dir}")
+        self.params, step, _ = ckpt.restore(
+            ckpt.step_path(ckpt_dir, step), like=self.params_struct,
+            shardings=self.params_shardings)
+        if self.refresher is not None:
+            self.refresher.current_step = step
+        return step
+
+    def make_refresher(self, ckpt_dir: str, every_steps: int = 1,
+                       base_step: int = 0) -> SnapshotRefresher:
+        self.refresher = SnapshotRefresher(
+            ckpt_dir, like=self.params_struct,
+            shardings=self.params_shardings, every_steps=every_steps,
+            base_step=base_step)
+        return self.refresher
+
+    # -- admission -----------------------------------------------------------
+
+    def _prefill_batch(self, r: Request) -> Dict[str, jax.Array]:
+        prompt = np.zeros((self.cfg.prompt_len,), np.int32)
+        n = min(len(r.prompt), self.cfg.prompt_len)
+        prompt[:n] = np.asarray(r.prompt[:n], np.int32)
+        batch = {"tokens": jnp.asarray(prompt[None, :])}
+        spec = self.api.batch_spec(self._pshape)
+        for name, struct in spec.items():  # enc-dec frames, VLM cross_feats
+            if name == "tokens":
+                continue
+            feat = (r.features or {}).get(name)
+            batch[name] = (jnp.asarray(feat, struct.dtype) if feat is not None
+                           else jnp.zeros(struct.shape, struct.dtype))
+        return batch
+
+    def _sample_first(self, logits: jax.Array, rid: int) -> int:
+        row = logits[0, -1].astype(jnp.float32)
+        if self.cfg.temperature > 0:
+            k = jax.random.fold_in(self._key, (rid + 1) << 20)
+            return int(jax.random.categorical(k, row / self.cfg.temperature))
+        return int(jnp.argmax(row))
+
+    def _join(self, slot: int, r: Request, now: float) -> None:
+        t0 = time.monotonic()
+        logits, pcache = self._prefill(self.params, self._prefill_batch(r))
+        first = self._sample_first(logits, r.rid)
+        rows, res = self.layout.pack_rows(pcache)
+        if self.layout.has_tokens and rows.shape[0] < self.layout.tokens:
+            # Prompt shorter than the ring: graft onto the empty template
+            # (identity row mapping — both rings index rows by pos % C, and
+            # prefill rows [0, C_p) hold positions [0, C_p)).
+            rows = self.layout.empty_rows.at[: rows.shape[0]].set(rows)
+        self.cache.alloc(slot)
+        self.cache.write_rows(slot, rows, res)
+        self.batcher.join(slot, SlotState(
+            request=r, next_token=first, pos=self.cfg.prompt_len,
+            remaining=r.max_new_tokens - 1, join_s=now,
+            ttft_s=time.monotonic() - t0, tokens=[first],
+            staleness=[self._staleness()]))
+
+    def _staleness(self) -> Tuple[int, Optional[float]]:
+        if self.refresher is None:
+            return (0, None)
+        return self.refresher.staleness()
+
+    # -- the loop ------------------------------------------------------------
+
+    def run(self, requests: Sequence[Request],
+            max_steps: int = 1_000_000) -> ServeReport:
+        q = AdmissionQueue(requests)
+        clock = Clock(self.cfg.virtual_dt)
+        completed: List[ServedRequest] = []
+        expired: List[int] = []
+        t0 = time.monotonic()
+
+        while q.pending or self.batcher.any_active:
+            now = clock.now()
+            if self.refresher is not None:
+                fresh = self.refresher.maybe_refresh(self.decode_steps)
+                if fresh is not None:
+                    self.params = fresh
+
+            expired.extend(r.rid for r in q.expire(now))
+
+            while (self.batcher.free_slot() is not None
+                   and self.cache.can_alloc()):
+                r = q.pop_ready(now)
+                if r is None:
+                    break
+                self._join(self.batcher.free_slot(), r, now)
+
+            # max_new_tokens == 1 is satisfied by the prefill token alone
+            for i in self.batcher.active():
+                if self.batcher.slots[i].remaining <= 0:
+                    self._finish(i, completed, now, "done")
+
+            if not self.batcher.any_active:
+                clock.idle()
+                continue
+
+            tokens, pos, mask = self.batcher.arrays()
+            key = jax.random.fold_in(self._key, self.decode_steps)
+            next_tok, self.cache.pages, self.cache.resident = self._step(
+                self.params, self.cache.pages, self.cache.resident,
+                self.cache.table_device(), jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(mask), key,
+                jnp.float32(self.cfg.temperature))
+            self.decode_steps += 1
+            clock.tick()
+            now = clock.now()
+
+            next_np = np.asarray(next_tok)
+            stale = self._staleness()
+            for i in self.batcher.active():
+                s = self.batcher.slots[i]
+                s.next_token = int(next_np[i])
+                s.pos += 1
+                s.remaining -= 1
+                s.tokens.append(s.next_token)
+                s.staleness.append(stale)
+                past_deadline = (s.request.deadline_s is not None
+                                 and now >= s.request.deadline_s)
+                if s.remaining <= 0 or past_deadline:
+                    self._finish(i, completed, now,
+                                 "done" if s.remaining <= 0 else "deadline")
+
+            if self.decode_steps >= max_steps:
+                break
+
+        return ServeReport(
+            completed=completed, expired_rids=expired,
+            wall_s=time.monotonic() - t0, decode_steps=self.decode_steps,
+            joins=self.batcher.joins, evicts=self.batcher.evicts,
+            refreshes=(self.refresher.refreshes if self.refresher else 0))
+
+    def _finish(self, slot: int, completed: List[ServedRequest], now: float,
+                reason: str) -> None:
+        s = self.batcher.evict(slot)
+        self.cache.free(slot)
+        completed.append(ServedRequest(
+            rid=s.request.rid, tokens=list(s.tokens), reason=reason,
+            arrival_s=s.request.arrival_s, join_s=s.join_s, finish_s=now,
+            ttft_s=s.ttft_s, staleness=list(s.staleness)))

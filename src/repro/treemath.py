@@ -89,6 +89,20 @@ def tree_allfinite(a: Pytree) -> jax.Array:
     return functools.reduce(jnp.logical_and, parts, jnp.bool_(True))
 
 
+def tree_moveaxis(a: Pytree, axes, dst: int = 0, lead_ndim: int = 0) -> Pytree:
+    """Per-leaf ``jnp.moveaxis``: ``axes`` is a flat sequence (leaf order) of
+    source axis indices, ``None`` leaving that leaf untouched. Both the source
+    axes and ``dst`` are offset by ``lead_ndim`` so the same spec works on
+    leaves carrying extra leading (slot/worker) axes. The serving plane uses
+    this to rotate each decode-cache leaf token-major before packing."""
+    leaves, treedef = jax.tree.flatten(a)
+    if len(leaves) != len(axes):
+        raise ValueError(f"axes spec has {len(axes)} entries for {len(leaves)} leaves")
+    moved = [x if ax is None else jnp.moveaxis(x, ax + lead_ndim, dst + lead_ndim)
+             for x, ax in zip(leaves, axes)]
+    return jax.tree.unflatten(treedef, moved)
+
+
 # -- packed flat views (the kernel dispatch substrate) -----------------------
 #
 # The Pallas hot-spot kernels (repro.kernels) operate on contiguous [D] /

@@ -1,0 +1,272 @@
+"""repro.serving: paged-cache layout round-trips, page alloc/free reuse,
+continuous batching (join AND evict mid-decode), greedy equivalence with a
+direct eager decode loop, deadlines, and the snapshot-refresh staleness
+knob."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.checkpoint import checkpoint as ckpt
+from repro.serving import (AdmissionQueue, ContinuousBatcher, PagedDecodeCache,
+                           Request, Server, ServingConfig, build_layout,
+                           synthetic_requests)
+
+ARCH = "deepseek-7b"       # reduced: 2-layer fp32 transformer, vocab 512
+MAX_SEQ, PAGE_TOKENS, PROMPT = 24, 4, 8
+
+
+@pytest.fixture(scope="module")
+def api():
+    return cfglib.get(ARCH).api(reduced=True)
+
+
+@pytest.fixture(scope="module")
+def layout(api):
+    return build_layout(api, MAX_SEQ, PAGE_TOKENS)
+
+
+def make_server(**kw):
+    cfg = ServingConfig(arch=ARCH, reduced=True, slots=2, prompt_len=PROMPT,
+                        max_seq=MAX_SEQ, page_tokens=PAGE_TOKENS,
+                        temperature=0.0, seed=0, virtual_dt=0.01, **kw)
+    return Server(cfg)
+
+
+def _filled_cache(api, seed=0):
+    """init_cache(1, MAX_SEQ) with every leaf filled with distinct values."""
+    rng = np.random.default_rng(seed)
+    def fill(x):
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(-1, 1000, x.shape), x.dtype)
+        return jnp.asarray(rng.standard_normal(x.shape), x.dtype)
+    return jax.tree.map(fill, api.init_cache(1, MAX_SEQ)[0])
+
+
+# -- layout / packing --------------------------------------------------------
+
+def test_layout_detection(api, layout):
+    assert layout.has_tokens and layout.tokens == MAX_SEQ
+    assert layout.page_tokens == PAGE_TOKENS
+    assert layout.pages_per_slot == MAX_SEQ // PAGE_TOKENS
+    assert layout.width > 0
+    # ssm: length-independent recurrent state -> resident-only layout
+    ssm_layout = build_layout(cfglib.get("mamba2-1.3b").api(reduced=True),
+                              MAX_SEQ, PAGE_TOKENS)
+    assert not ssm_layout.has_tokens
+    assert ssm_layout.pages_per_slot == 0
+    assert ssm_layout.res_width > 0
+
+
+def test_pack_roundtrip(api, layout):
+    cache = _filled_cache(api)
+    rows, res = layout.pack_rows(cache)
+    assert rows.shape == (layout.tokens, layout.width)
+    rebuilt = layout.unpack_slots(rows, res, lead=0)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(rebuilt)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_roundtrip_stacked(api, layout):
+    """With a leading slot axis (the decode-step view)."""
+    caches = [_filled_cache(api, seed=s) for s in (1, 2)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    rows, res = layout.pack_rows(stacked, lead=1)
+    assert rows.shape == (2, layout.tokens, layout.width)
+    rebuilt = layout.unpack_slots(rows, res, lead=1)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- page accounting ---------------------------------------------------------
+
+def test_page_alloc_free_reuse(layout):
+    pps = layout.pages_per_slot
+    cache = PagedDecodeCache(layout, slots=2)
+    assert cache.num_pages == 2 * pps
+    got0 = cache.alloc(0)
+    cache.alloc(1)
+    assert not cache.can_alloc() and cache.free_pages == 0
+    with pytest.raises(ValueError):
+        cache.alloc(0)          # double alloc
+    freed = cache.free(0)
+    assert sorted(freed) == sorted(got0)
+    assert (cache.tables[0] == cache.null_page).all()
+    # LIFO: the next admission reuses the just-evicted slot's pages first
+    got = cache.alloc(0)
+    assert got[0] == freed[-1]
+    assert sorted(got) == sorted(freed)
+
+
+def test_page_pool_exhaustion(layout):
+    pps = layout.pages_per_slot
+    cache = PagedDecodeCache(layout, slots=2, num_pages=pps)  # one slot's worth
+    cache.alloc(0)
+    assert not cache.can_alloc()
+    with pytest.raises(ValueError):
+        cache.alloc(1)
+    with pytest.raises(ValueError):
+        PagedDecodeCache(layout, slots=1, num_pages=pps - 1)
+
+
+# -- queue / batcher units ---------------------------------------------------
+
+def test_admission_queue_order_and_expiry():
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                    arrival_s=t, deadline_s=dl)
+            for i, (t, dl) in enumerate([(0.5, None), (0.0, 0.2), (1.0, 5.0)])]
+    q = AdmissionQueue(reqs)
+    assert q.pop_ready(0.0).rid == 1          # earliest arrival first
+    assert q.pop_ready(0.0) is None           # rid 0 hasn't arrived yet
+    q.push_front(reqs[1])
+    assert [r.rid for r in q.expire(0.3)] == [1]   # deadline passed in queue
+    assert q.pop_ready(0.6).rid == 0
+    assert len(q) == 1
+
+
+def test_batcher_arrays():
+    from repro.serving import SlotState
+    b = ContinuousBatcher(3)
+    assert b.free_slot() == 0 and not b.any_active
+    r = Request(rid=5, prompt=np.zeros(4, np.int32), max_new_tokens=3)
+    b.join(1, SlotState(request=r, next_token=42, pos=7, remaining=2,
+                        join_s=0.0, ttft_s=0.0, tokens=[42]))
+    tokens, pos, mask = b.arrays()
+    np.testing.assert_array_equal(tokens, [0, 42, 0])
+    np.testing.assert_array_equal(pos, [0, 7, 0])
+    np.testing.assert_array_equal(mask, [False, True, False])
+    with pytest.raises(ValueError):
+        b.join(1, SlotState(request=r, next_token=0, pos=0, remaining=1,
+                            join_s=0.0, ttft_s=0.0))
+    assert b.evict(1).request.rid == 5
+    assert b.free_slot() == 0 and b.joins == 1 and b.evicts == 1
+
+
+# -- end-to-end serving ------------------------------------------------------
+
+def test_greedy_matches_eager_reference(api):
+    """Served tokens through the paged cache == a direct batch-1
+    prefill+decode loop on a plain full-size cache. Unequal lengths force
+    one slot to keep decoding (masked lanes, null-page writes) after the
+    other evicts."""
+    srv = make_server()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, api.vocab_real, PROMPT).astype(np.int32)
+               for _ in range(2)]
+    gens = [5, 9]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=g)
+            for i, (p, g) in enumerate(zip(prompts, gens))]
+    rep = srv.run(reqs)
+    served = {r.rid: r.tokens for r in rep.completed}
+
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        logits, pc = api.prefill(srv.params, {"tokens": jnp.asarray(p[None])})
+        full = api.init_cache(1, MAX_SEQ)[0]
+        cache = jax.tree.map(
+            lambda dst, src: src if dst.shape == src.shape
+            else dst.at[tuple(slice(0, d) for d in src.shape)].set(src),
+            full, pc)
+        tok = int(jnp.argmax(logits[0, -1]))
+        ref = [tok]
+        for j in range(g - 1):
+            lg, cache = api.decode(srv.params, jnp.asarray([[tok]], jnp.int32),
+                                   cache, jnp.int32(PROMPT + j))
+            tok = int(jnp.argmax(lg[0, -1]))
+            ref.append(tok)
+        assert served[i] == ref, f"rid {i}"
+
+
+def test_continuous_batching_join_evict_and_determinism(api):
+    """3 requests on 2 slots: the third joins mid-decode in a recycled slot
+    (reusing its pages), everyone completes, and the whole serve is
+    deterministic across fresh servers."""
+    def go():
+        srv = make_server()
+        reqs = synthetic_requests(3, PROMPT, 1, api.vocab_real, seed=11)
+        for r, g in zip(reqs, (3, 8, 4)):
+            r.max_new_tokens = g
+        rep = srv.run(reqs)
+        return rep, srv
+
+    rep, srv = go()
+    assert len(rep.completed) == 3
+    assert rep.joins == 3 > srv.cfg.slots          # a slot was recycled
+    assert rep.evicts == 3
+    assert sorted(len(r.tokens) for r in rep.completed) == [3, 4, 8]
+    assert all(r.reason == "done" for r in rep.completed)
+    # all pages back on the free list after the drain
+    assert srv.cache.free_pages == srv.cache.num_pages
+    assert (srv.cache.tables == srv.cache.null_page).all()
+    # overlap actually happened: fewer steps than serial decoding would take
+    assert rep.decode_steps < (3 - 1) + (8 - 1) + (4 - 1)
+
+    rep2, _ = go()
+    assert ({r.rid: r.tokens for r in rep.completed}
+            == {r.rid: r.tokens for r in rep2.completed})
+
+
+def test_deadline_eviction(api):
+    """Virtual clock: a request whose deadline lands mid-decode is evicted
+    with partial output; the other request completes."""
+    srv = make_server()
+    dt = srv.cfg.virtual_dt
+    reqs = synthetic_requests(2, PROMPT, 1, api.vocab_real, seed=5)
+    reqs[0].max_new_tokens = 50
+    reqs[0].deadline_s = 4.5 * dt
+    reqs[1].max_new_tokens = 4
+    rep = srv.run(reqs)
+    by_rid = {r.rid: r for r in rep.completed}
+    assert by_rid[0].reason == "deadline"
+    assert 0 < len(by_rid[0].tokens) < 50
+    assert by_rid[1].reason == "done" and len(by_rid[1].tokens) == 4
+    assert srv.cache.free_pages == srv.cache.num_pages
+
+
+def test_snapshot_refresh_staleness_knob(api, tmp_path):
+    """Measured per-token staleness responds to the refresh period: never-
+    refresh stays steps behind the publisher; refresh-every-step catches up
+    and actually swaps the served params."""
+    d = str(tmp_path)
+    srv = make_server()
+    for s in (1, 2, 3, 4):
+        ckpt.save(ckpt.step_path(d, s),
+                  jax.tree.map(lambda x: x * (1 + 0.05 * s), srv.params),
+                  step=s, extra={"published_at": 0.0})
+
+    def serve(every):
+        srv = make_server()
+        srv.make_refresher(d, every_steps=every)
+        rep = srv.run(synthetic_requests(2, PROMPT, 6, api.vocab_real,
+                                         seed=7))
+        mean = rep.staleness_summary()["mean_steps_behind"]
+        return rep, srv, mean
+
+    rep_off, srv_off, stale_off = serve(every=0)
+    rep_on, srv_on, stale_on = serve(every=1)
+    assert rep_off.refreshes == 0 and srv_off.refresher.current_step == 0
+    assert stale_off == 4.0                       # 4 publishes behind, always
+    assert rep_on.refreshes == 1 and srv_on.refresher.current_step == 4
+    assert stale_on < stale_off
+    # the swap changed what was served
+    assert any(a.tokens != b.tokens for a, b in zip(
+        sorted(rep_off.completed, key=lambda r: r.rid),
+        sorted(rep_on.completed, key=lambda r: r.rid)))
+    # every served token carries a stamp
+    assert all(len(r.staleness) == len(r.tokens) for r in rep_on.completed)
+
+
+def test_ssm_resident_only_serving():
+    """Length-independent (SSM) caches serve through the resident path."""
+    cfg = ServingConfig(arch="mamba2-1.3b", reduced=True, slots=2,
+                        prompt_len=6, max_seq=16, temperature=0.0,
+                        virtual_dt=0.01)
+    srv = Server(cfg)
+    api = srv.api
+    rep = srv.run(synthetic_requests(3, 6, 4, api.vocab_real, seed=2))
+    assert len(rep.completed) == 3
+    assert all(len(r.tokens) == 4 for r in rep.completed)
+    assert rep.joins == 3 > cfg.slots
