@@ -1,0 +1,104 @@
+"""CI ratchet gate for the engine-step benchmark trajectory.
+
+Compares the COMMITTED ``experiments/BENCH_engine_step.json`` against the
+committed floors in ``experiments/BENCH_floors.json`` and fails when any
+mode's speedup has dropped below its floor. Both files are repo artifacts,
+so the gate is fully deterministic in CI — no timing runs there; what it
+prevents is *committing* a bench record that regresses a speedup the repo
+has already demonstrated.
+
+Floors only ever move UP: ``--update`` ratchets each floor to the committed
+measurement (truncated to 2 decimals, which leaves a small noise margin for
+future reruns) and never lowers one. Tracked groups:
+
+* ``speedups``        — fused_donated vs tree_undonated, per mode.
+* ``sparse_speedups`` — the EF top-k compensated leg vs the dense tree
+                        baseline (stale-psum).
+* ``mega_speedups``   — the one-pass fused-update megakernel vs the
+                        three-dispatch kernel path it replaces, per mode.
+
+The sync floors sit BELOW 1.0 by design: sync is a parity leg — the two
+variants compile to the same step (no ring to deliver, and on oversized
+CPU operands the packed tails fall back to the identical per-leaf path),
+so its ratio is pure allocator/heap jitter around 1.0 (±5-7% observed).
+Its floor guards against a structural regression (e.g. sync suddenly
+paying for a ring), not against noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+BENCH = "experiments/BENCH_engine_step.json"
+FLOORS = "experiments/BENCH_floors.json"
+# floors-file group -> per-mode key in the bench record.
+KEYS = (("speedups", "speedup"),
+        ("sparse_speedups", "sparse_speedup"),
+        ("mega_speedups", "mega_speedup"))
+
+
+def measured(bench: dict) -> dict:
+    """Extract {group: {mode: value}} from a BENCH_engine_step record."""
+    out = {group: {} for group, _ in KEYS}
+    for group, key in KEYS:
+        for mode, row in bench.get("modes", {}).items():
+            if key in row:
+                out[group][mode] = row[key]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="ratchet floors UP to the committed bench record "
+                         "(floors never move down)")
+    ap.add_argument("--bench", default=BENCH)
+    ap.add_argument("--floors", default=FLOORS)
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        got = measured(json.load(f))
+    with open(args.floors) as f:
+        floors = json.load(f)
+
+    if args.update:
+        for group, _ in KEYS:
+            for mode, val in got.get(group, {}).items():
+                old = floors.setdefault(group, {}).get(mode, 0.0)
+                # Truncate (not round): the new floor sits at or below the
+                # measurement, leaving rerun noise headroom.
+                floors[group][mode] = max(old, math.floor(val * 100) / 100)
+        with open(args.floors, "w") as f:
+            json.dump(floors, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"floors ratcheted upward -> {args.floors}")
+        return 0
+
+    failures, checked = [], 0
+    for group, _ in KEYS:
+        for mode, floor in floors.get(group, {}).items():
+            val = got.get(group, {}).get(mode)
+            checked += 1
+            if val is None:
+                failures.append(f"{group}/{mode}: floor {floor} committed "
+                                f"but no measurement in {args.bench}")
+            elif val < floor:
+                failures.append(f"{group}/{mode}: {val} < floor {floor}")
+            else:
+                print(f"ok  {group}/{mode}: {val} >= {floor}")
+    if failures:
+        print("ENGINE-STEP RATCHET FAILED (committed bench below floors):")
+        for line in failures:
+            print("  " + line)
+        print("If the regression is intentional, re-run the bench on a "
+              "quiet machine first; floors are only ever raised "
+              "(--update), never lowered.")
+        return 1
+    print(f"ratchet ok: {checked} floors held")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,10 @@ import sys
 import time
 
 SUMMARY_PATH = "experiments/BENCH_summary.json"
+# Every registered benchmark, in run order — the suite dict in main() is
+# checked against this so the --only help text can never go stale again.
+SUITE_NAMES = ("fig1", "fig2", "fig3", "fig4", "fig5", "theorem1",
+               "kernels", "roofline", "lowering", "engine_step", "serving")
 # Where each bench leaves its committed record (None = prints only).
 BENCH_FILES = {
     "fig1": "experiments/fig1.json",
@@ -51,6 +55,12 @@ def refresh_summary(name: str, timestamp: str, result=None,
                       if "sparse_speedup" in r}
             if sparse:
                 headline["sparse_speedups"] = sparse
+            # The one-pass fused-megakernel leg (PR 7): fused_donated /
+            # mega_donated per mode.
+            mega = {m: r["mega_speedup"] for m, r in modes.items()
+                    if "mega_speedup" in r}
+            if mega:
+                headline["mega_speedups"] = mega
     if name == "serving":
         sweep = (result or {}).get("sweep")
         if sweep is None and src and os.path.exists(src):
@@ -85,8 +95,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig1|fig2|fig3|fig4|fig5"
-                         "|theorem1|kernels|roofline|lowering|engine_step")
+                    help="comma-separated subset: " + "|".join(SUITE_NAMES))
     args = ap.parse_args()
     quick = not args.full
     os.makedirs("experiments", exist_ok=True)
@@ -131,11 +140,17 @@ def main() -> None:
             "benchmarks.serving_bench", fromlist=["main"]).main(quick=quick),
     }
 
+    assert tuple(suite) == SUITE_NAMES, "SUITE_NAMES out of sync with suite"
+    # Validate the WHOLE --only list before running anything: a typo in the
+    # second name used to surface only after the first benchmark had run for
+    # minutes.
     names = args.only.split(",") if args.only else list(suite)
+    unknown = [n for n in names if n not in suite]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown!r}; "
+                         f"have {list(suite)}")
     stamp = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
     for name in names:
-        if name not in suite:
-            raise SystemExit(f"unknown benchmark {name!r}; have {list(suite)}")
         t0 = time.time()
         print(f"\n===== {name} ({'full' if args.full else 'quick'}) =====",
               flush=True)

@@ -51,12 +51,19 @@ class CompensateConfig:
     lr_scale: str = "none"     # none | inverse | theorem1
     compress: str = "none"     # none | topk:K | thresh:V
     s: int = 0                 # staleness bound (theorem1 denominator)
+    ef_momentum: float = 0.0   # DGC masked-momentum beta (0 = plain EF)
 
     def __post_init__(self):
         if self.lr_scale not in LR_POLICIES:
             raise ValueError(f"lr_scale must be one of {LR_POLICIES}, "
                              f"got {self.lr_scale!r}")
         parse_compress(self.compress)  # raises on bad grammar
+        if not 0.0 <= self.ef_momentum < 1.0:
+            raise ValueError("ef_momentum must be in [0, 1), got "
+                             f"{self.ef_momentum!r}")
+        if self.ef_momentum > 0 and self.compress == "none":
+            raise ValueError("ef_momentum corrects the EF sparsifier; it "
+                             "needs compress != 'none'")
 
     @property
     def active(self) -> bool:
@@ -87,8 +94,11 @@ class Compensator:
     # -- comp state --------------------------------------------------------
     def init(self, params, num_workers: Optional[int] = None) -> dict:
         """Residual (zero, packed, block-padded like the gradient ring) plus
-        the LR policy's signals. ``num_workers`` selects the per-worker
-        [P, D] residual layout (simulate mode)."""
+        the LR policy's signals and, with ``ef_momentum > 0``, the DGC
+        masked-momentum rows (same layout as the residual). ``num_workers``
+        selects the per-worker [P, D] layout used by every mode that
+        sparsifies per source worker before transport (simulate, and the
+        per-worker-delay gradient modes)."""
         from repro.kernels import dispatch
         comp = dict(init_signals(self.cfg.lr_scale))
         if self.sparsifies:
@@ -96,9 +106,47 @@ class Compensator:
                                    dispatch.PACK_ALIGN)
             shape = (num_workers, width) if num_workers else (width,)
             comp["resid"] = jnp.zeros(shape, jnp.float32)
+            if self.cfg.ef_momentum > 0:
+                comp["mom"] = jnp.zeros(shape, jnp.float32)
         return comp
 
     # -- sparsification ----------------------------------------------------
+    def ef_inputs(self, comp: dict, vec, true_size: int):
+        """Accumulate this step's packed rows into the EF state and derive
+        the per-row split threshold WITHOUT performing the split — the fused
+        megakernel (``dispatch.fused_update``) masks in-kernel. Returns
+        ``(acc, thr, mom_in)``; ``mom_in`` is None without momentum,
+        otherwise the pre-mask velocity ``beta * mom + vec`` whose masked
+        form the caller must commit back via :meth:`ef_commit`."""
+        beta = self.cfg.ef_momentum
+        if beta > 0:
+            mom_in = beta * comp["mom"] + vec
+            acc = mom_in + comp["resid"]
+        else:
+            mom_in = None
+            acc = vec + comp["resid"]
+        if self.kind == "topk":
+            k = sp_lib.topk_count(self.amount, true_size)
+            thr = sp_lib.topk_threshold(jnp.abs(acc), k, true_size)
+        else:  # thresh
+            thr = jnp.full(acc.shape[:-1], self.amount, jnp.float32)
+        return acc, thr, mom_in
+
+    def ef_commit(self, comp: dict, resid, mom=None) -> dict:
+        """Thread the post-split EF state back into the comp pytree."""
+        comp = {**comp, "resid": resid}
+        if mom is not None:
+            comp["mom"] = mom
+        return comp
+
+    def ef_metrics(self, sent, true_size: int) -> dict:
+        """Realized sparsity of a sent payload over its real entries."""
+        rows = 1
+        for n in sent.shape[:-1]:
+            rows *= n
+        nnz = jnp.sum((sent != 0).astype(jnp.float32))
+        return {"sparsity": 1.0 - nnz / (rows * true_size)}
+
     def sparsify_tree(self, comp: dict, tree, lead_ndim: int = 0):
         """EF-sparsify a gradient/update pytree via its packed flat view.
         Returns ``(tree', comp', metrics)``; a no-op for compress='none'."""
@@ -108,19 +156,24 @@ class Compensator:
         spec = tm.pack_spec(tree, lead_ndim=lead_ndim)
         vec = tm.tree_pack(tree, lead_ndim=lead_ndim,
                            pad_to=dispatch.PACK_ALIGN)
-        sent, resid, sparsity = sparsify_with_feedback(
-            vec, comp["resid"], self.kind, self.amount, spec.total)
-        comp = {**comp, "resid": resid}
-        return tm.tree_unpack(sent, spec), comp, {"sparsity": sparsity}
+        sent, comp, metrics = self.sparsify_packed(comp, vec, spec.total)
+        return tm.tree_unpack(sent, spec), comp, metrics
 
     def sparsify_packed(self, comp: dict, vec, true_size: int):
-        """Same split for callers already holding the packed view (the
-        simulate-mode packed pending ring)."""
+        """Full EF split for callers holding the packed view: accumulate,
+        threshold, split through the fused ``sparsify_topk`` kernel, and
+        (with momentum) zero the velocity where the mask kept the value."""
         if not self.sparsifies:
             return vec, comp, {}
-        sent, resid, sparsity = sparsify_with_feedback(
-            vec, comp["resid"], self.kind, self.amount, true_size)
-        return sent, {**comp, "resid": resid}, {"sparsity": sparsity}
+        from repro.kernels import dispatch
+        acc, thr, mom_in = self.ef_inputs(comp, vec, true_size)
+        sent, resid = dispatch.sparsify_topk(acc, thr)
+        mom_out = None
+        if mom_in is not None:
+            keep = jnp.abs(acc) >= jnp.asarray(thr, jnp.float32)[..., None]
+            mom_out = jnp.where(keep, 0.0, mom_in)
+        return (sent, self.ef_commit(comp, resid, mom_out),
+                self.ef_metrics(sent, true_size))
 
     # -- LR scaling --------------------------------------------------------
     def lr_factor(self, comp: dict, staleness, step):

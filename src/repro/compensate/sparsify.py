@@ -71,15 +71,21 @@ EXACT_TOPK_MAX = 1 << 16
 TOPK_SAMPLE = 1 << 13
 
 
-def topk_threshold(absacc, k: int):
-    """Per-row magnitude threshold keeping ~k of D elements: exact k-th
-    largest up to EXACT_TOPK_MAX, sampled-quantile estimate above."""
+def topk_threshold(absacc, k: int, true_size: Optional[int] = None):
+    """Per-row magnitude threshold keeping ~k of the ``true_size`` real
+    elements: exact k-th largest up to EXACT_TOPK_MAX, sampled-quantile
+    estimate above. Rows may be zero-padded past ``true_size``; the pad
+    tail is excluded — striding over the padded width would land pad zeros
+    in the subsample and scale ``ks`` by the padded length, biasing the
+    estimate low (over-keeping) whenever padding dominates the row."""
     d = absacc.shape[-1]
-    if d <= EXACT_TOPK_MAX:
-        return jax.lax.top_k(absacc, k)[0][..., -1]
-    stride = -(-d // TOPK_SAMPLE)            # ceil: sample <= TOPK_SAMPLE
-    sample = absacc[..., ::stride]
-    ks = max(1, round(k * sample.shape[-1] / d))
+    n = d if true_size is None else min(true_size, d)
+    real = absacc if n == d else absacc[..., :n]
+    if n <= EXACT_TOPK_MAX:
+        return jax.lax.top_k(real, min(k, n))[0][..., -1]
+    stride = -(-n // TOPK_SAMPLE)            # ceil: sample <= TOPK_SAMPLE
+    sample = real[..., ::stride]
+    ks = max(1, round(k * sample.shape[-1] / n))
     return jax.lax.top_k(sample, ks)[0][..., -1]
 
 
@@ -104,7 +110,7 @@ def sparsify_with_feedback(vec: jax.Array, resid: jax.Array, kind: str,
     acc = vec + resid
     if kind == "topk":
         k = topk_count(amount, true_size)
-        thr = topk_threshold(jnp.abs(acc), k)
+        thr = topk_threshold(jnp.abs(acc), k, true_size)
     else:  # thresh
         thr = jnp.full(acc.shape[:-1], amount, jnp.float32)
     sent, new_resid = dispatch.sparsify_topk(acc, thr)

@@ -35,7 +35,7 @@ from repro import treemath as tm
 from repro.delays.models import DelaySpec, UniformDelay, as_spec
 from repro.delays.schedule import Schedule
 from repro.kernels import dispatch
-from repro.optim.optimizers import Optimizer
+from repro.optim.optimizers import Optimizer, lr_at
 
 Pytree = Any
 
@@ -64,6 +64,13 @@ class StaleSyncConfig:
     # of per-leaf tree math. False keeps the legacy per-leaf buffer
     # (bitwise-identical trajectories); True is fp32-tolerance equivalent.
     kernels: bool = False
+    # One-pass megakernel step (dispatch.fused_update): EF split, weighted
+    # stale delivery and the Adam update fuse into a single pass over the
+    # packed [D] view, with the Adam moments stored PACKED in opt_state
+    # ({"step", "m" [D], "v" [D]} fp32) so they are read/written exactly
+    # once per step with no per-step pack/unpack. Requires kernels=True and
+    # an optimizer carrying an Adam spec (optimizers.adam().spec).
+    fused_update: bool = False
 
     def __post_init__(self):
         if self.delay is None:
@@ -72,6 +79,9 @@ class StaleSyncConfig:
             object.__setattr__(self, "delay", as_spec(self.delay))
         if self.delay_table is not None and not self.per_worker_delays:
             raise ValueError("delay_table requires per_worker_delays=True")
+        if self.fused_update and not self.kernels:
+            raise ValueError("fused_update=True requires kernels=True "
+                             "(the megakernel runs over the packed ring)")
 
     @property
     def slots(self) -> int:
@@ -102,9 +112,17 @@ def init_state(params: Pytree, optimizer: Optimizer, cfg: StaleSyncConfig,
     else:
         gbuf = jax.tree.map(
             lambda x: jnp.zeros(lead + x.shape, cfg.buffer_dtype), params)
+    if cfg.fused_update:
+        # Megakernel: Adam moments live packed, aligned with the ring width,
+        # so the fused pass reads/writes them in place (donation-aliased).
+        opt_state = {"step": jnp.int32(0),
+                     "m": jnp.zeros((width,), jnp.float32),
+                     "v": jnp.zeros((width,), jnp.float32)}
+    else:
+        opt_state = optimizer.init(params)
     return StaleTrainState(
         params=params,
-        opt_state=optimizer.init(params),
+        opt_state=opt_state,
         gbuf=gbuf,
         step=jnp.int32(0),
         key=key,
@@ -125,13 +143,36 @@ def make_stale_train_step(
     a plain data-parallel step).
 
     ``compensator`` (a ``repro.compensate.Compensator``) slots the
-    compensation layer between delivery and the optimizer: the delivered
-    aggregate is EF-sparsified and the optimizer's delta is scaled by the
-    staleness-aware LR factor. The step then takes/returns the comp state:
-    ``step(state, batch, bound=, comp=) -> (state, comp, metrics)``. With
-    ``compensator=None`` (default) this code path is untouched and the
-    legacy 2-tuple signature/behavior is preserved bitwise."""
+    compensation layer around transport: each source's gradient is
+    EF-sparsified BEFORE it enters the ring (the ring stores the sparse
+    payload — see the ring-layout note below) and the optimizer's delta is
+    scaled by the staleness-aware LR factor after delivery. The step then
+    takes/returns the comp state: ``step(state, batch, bound=, comp=) ->
+    (state, comp, metrics)``. With ``compensator=None`` (default) this code
+    path is untouched and the legacy 2-tuple signature/behavior is
+    preserved bitwise.
+
+    Ring layout under compression: slot rows hold the post-split ``sent``
+    payload — sparse VALUES at the dense packed width (zeros where masked),
+    cast to ``buffer_dtype``. Keeping the dense width means delivery stays
+    the same gather + weighted reduction; a later change can shrink rows to
+    (indices, values) pairs without touching the step math, since only the
+    write/gather sites interpret the row layout.
+
+    With ``cfg.fused_update`` the whole post-gradient tail is ONE
+    ``dispatch.fused_update`` pass: EF split, weighted delivery of the
+    gathered ring rows, and the Adam update over packed moments. Freshness
+    (delay 0) is resolved in-kernel via a per-row ``fresh`` flag selecting
+    this step's ``sent`` over the gathered (pre-write) ring row — bitwise
+    the same delivery as the write-then-read order, without scheduling a
+    ring read before the ring write on the donated buffer."""
     p = cfg.num_workers
+    if cfg.fused_update:
+        spec_ = optimizer.spec if hasattr(optimizer, "spec") else None
+        if not (spec_ and spec_.get("name") == "adam"):
+            raise ValueError(
+                "fused_update=True needs an optimizer with an Adam spec "
+                "(optimizers.adam(...)); got an opaque optimizer")
     # One realized delay source for the whole step (repro.delays): the
     # legacy ``delay_table`` becomes a Schedule source; samplers draw from
     # the same per-step key as before (bitwise-identical trajectories,
@@ -153,6 +194,119 @@ def make_stale_train_step(
             lambda x: x.reshape((p, x.shape[0] // p) + x.shape[1:]), batch)
         return jax.vmap(one)(shaped)  # (losses [P], grads [P, ...])
 
+    def realized_delays(kdelay, step, bound, shape):
+        """Sampled per-step delays with every clamp applied (ring size,
+        dynamic bound, no-history-before-step-0)."""
+        d = source.delays(kdelay, step, shape)
+        if clamp_slots:
+            d = jnp.minimum(d, cfg.slots - 1)
+        if bound is not None:
+            d = jnp.minimum(d, jnp.asarray(bound, jnp.int32))
+        return jnp.minimum(d, step)
+
+    def fused_tail(state, losses, gtree, kdelay, key, bound, comp):
+        """Megakernel tail: everything after the backward pass is ONE
+        ``dispatch.fused_update`` pass over the packed [D] view — EF split
+        of the source rows, weighted delivery of the gathered ring rows
+        (fresh rows take this step's in-kernel ``sent``), and the Adam
+        moment/param update on the packed opt_state."""
+        per = cfg.per_worker_delays
+        slots = cfg.slots
+        write = jnp.mod(state.step, slots)
+        spec = tm.pack_spec(state.params)
+        gvec = tm.tree_pack(gtree, lead_ndim=1 if per else 0,
+                            pad_to=dispatch.PACK_ALIGN)
+        if cfg.s == 0:
+            d = jnp.zeros((p,) if per else (), jnp.int32)
+        else:
+            d = realized_delays(kdelay, state.step, bound,
+                                (p,) if per else ())
+        staleness = d if per else jnp.broadcast_to(d, (p,))
+        mean_stale = staleness.astype(jnp.float32).mean()
+        read = jnp.mod(state.step - d, slots)
+
+        cmetrics = {}
+        factor = jnp.float32(1.0)
+        if compensator is not None and compensator.scales:
+            factor = compensator.lr_factor(comp, mean_stale, state.step)
+            cmetrics["lr_scale"] = factor
+        osp = optimizer.spec
+        ostep = state.opt_state["step"] + 1
+        eta = lr_at(osp["lr"], ostep)
+        m, v = state.opt_state["m"], state.opt_state["v"]
+        pzero = jnp.zeros_like(m)
+        adam_kw = dict(lr=eta, b1=osp["b1"], b2=osp["b2"], eps=osp["eps"],
+                       step=ostep, scale=factor)
+
+        if compensator is not None and compensator.sparsifies:
+            # Gather the PRE-write ring rows; the kernel substitutes this
+            # step's sent for fresh (delay 0) rows, so the sparse payload
+            # only has to reach the ring after the kernel.
+            acc, thr, mom_in = compensator.ef_inputs(comp, gvec, spec.total)
+            if per:
+                sel = jnp.take_along_axis(
+                    state.gbuf, read.reshape((1, p, 1)), axis=0)[0]
+                weights = jnp.full((p,), 1.0 / p, jnp.float32)
+            else:
+                sel = jax.lax.dynamic_index_in_dim(state.gbuf, read, 0,
+                                                   keepdims=True)
+                acc, thr = acc[None], jnp.reshape(thr, (1,))
+                mom_in = None if mom_in is None else mom_in[None]
+                weights = jnp.ones((1,), jnp.float32)
+            fresh = (d == 0).astype(jnp.float32).reshape(weights.shape)
+            outs = dispatch.fused_update(pzero, m, v, sel, weights,
+                                         acc=acc, thr=thr, fresh=fresh,
+                                         mom=mom_in, **adam_kw)
+            dneg, m2, v2, u, sent, resid = outs[:6]
+            mom_out = outs[6] if mom_in is not None else None
+            comp = compensator.ef_commit(
+                comp, resid if per else resid[0],
+                mom_out if (per or mom_out is None) else mom_out[0])
+            cmetrics.update(compensator.ef_metrics(sent, spec.total))
+            payload = sent if per else sent[0]
+            gbuf = jax.lax.dynamic_update_index_in_dim(
+                state.gbuf, payload.astype(state.gbuf.dtype), write, 0)
+        else:
+            # Dense: the ring write happens first and the gather reads the
+            # written ring (fresh rows come back verbatim) — the same
+            # write-then-read order as the three-dispatch path.
+            gbuf = jax.lax.dynamic_update_index_in_dim(
+                state.gbuf, gvec.astype(state.gbuf.dtype), write, 0)
+            if per:
+                sel = jnp.take_along_axis(
+                    gbuf, read.reshape((1, p, 1)), axis=0)[0]
+                weights = jnp.full((p,), 1.0 / p, jnp.float32)
+            else:
+                sel = jax.lax.dynamic_index_in_dim(gbuf, read, 0,
+                                                   keepdims=True)
+                weights = jnp.ones((1,), jnp.float32)
+            dneg, m2, v2, u = dispatch.fused_update(pzero, m, v, sel,
+                                                    weights, **adam_kw)
+
+        delta32 = tm.tree_unpack(dneg, spec, dtype=jnp.float32)
+        wd = osp["weight_decay"]
+        swd = factor * eta * wd if wd else None
+
+        def delta_leaf(dl, pp):
+            if swd is not None:
+                dl = dl - swd * pp
+            return dl.astype(pp.dtype)
+
+        delta = jax.tree.map(delta_leaf, delta32, state.params)
+        params = tm.tree_add(state.params, delta)
+        new_state = StaleTrainState(
+            params=params, opt_state={"step": ostep, "m": m2, "v": v2},
+            gbuf=gbuf, step=state.step + 1, key=key)
+        metrics = {
+            "loss": losses.mean(),
+            "grad_norm": jnp.sqrt(jnp.sum(u * u)),
+            "mean_staleness": mean_stale,
+            **cmetrics,
+        }
+        if compensator is not None:
+            return new_state, comp, metrics
+        return new_state, metrics
+
     def step(state: StaleTrainState, batch,
              bound: Optional[jax.Array] = None,
              comp: Pytree = None) -> Tuple[StaleTrainState, dict]:
@@ -167,14 +321,18 @@ def make_stale_train_step(
             loss, gmean = jax.value_and_grad(loss_fn)(state.params, batch)
             losses = loss[None]
             grads = None
+        if cfg.fused_update:
+            return fused_tail(state, losses,
+                              grads if cfg.per_worker_delays else gmean,
+                              kdelay, key, bound, comp)
 
         slots = cfg.slots
         write = jnp.mod(state.step, slots)
-        # Trace-time bookkeeping for the compensator (each box is written at
-        # most once per trace): the kernel path EF-splits the PACKED
-        # aggregate before unpacking, saving one tree_pack + tree_unpack of
-        # the full [D] gradient vs re-packing the unpacked tree (the
-        # residual shares the packed width by construction).
+        # Compression runs per SOURCE, before the ring write (pre-transport:
+        # the ring stores the sparse sent payload, which is where sparsity
+        # saves wire bytes). The residual/momentum state therefore follows
+        # the source layout — [P, D] per-worker, [D] aggregate/sync. Each
+        # trace-time box is written at most once per trace.
         comp_box, cmetrics = [comp], {}
         if cfg.kernels:
             # Packed hot path: gradients concatenate once into a contiguous
@@ -186,19 +344,24 @@ def make_stale_train_step(
             gvec = (tm.tree_pack(grads, lead_ndim=1, pad_to=pad)
                     if cfg.per_worker_delays
                     else tm.tree_pack(gmean, pad_to=pad))
+            if compensator is not None and compensator.sparsifies:
+                gvec, comp_box[0], cm = compensator.sparsify_packed(
+                    comp_box[0], gvec, spec.total)
+                cmetrics.update(cm)
             gbuf = jax.lax.dynamic_update_index_in_dim(
                 state.gbuf, gvec.astype(state.gbuf.dtype), write, 0)
 
             def kernel_agg(sel, weights):
                 aggv = dispatch.stale_accum(
                     jnp.zeros((sel.shape[-1],), jnp.float32), sel, weights)
-                if compensator is not None and compensator.sparsifies:
-                    aggv, comp_box[0], cm = compensator.sparsify_packed(
-                        comp_box[0], aggv, spec.total)
-                    cmetrics.update(cm)
                 return tm.tree_unpack(aggv, spec, dtype=jnp.float32)
         else:
             to_buffer = grads if cfg.per_worker_delays else gmean
+            if compensator is not None and compensator.sparsifies:
+                to_buffer, comp_box[0], cm = compensator.sparsify_tree(
+                    comp_box[0], to_buffer,
+                    lead_ndim=1 if cfg.per_worker_delays else 0)
+                cmetrics.update(cm)
             gbuf = jax.tree.map(
                 lambda buf, g: jax.lax.dynamic_update_index_in_dim(
                     buf, g.astype(buf.dtype), write, 0),
@@ -208,9 +371,14 @@ def make_stale_train_step(
             if cfg.kernels and cfg.per_worker_delays:
                 agg = kernel_agg(gvec, jnp.full((p,), 1.0 / p, jnp.float32))
             elif cfg.per_worker_delays:
-                agg = jax.tree.map(lambda g: g.mean(axis=0), grads)
+                agg = jax.tree.map(lambda g: g.mean(axis=0), to_buffer)
+            elif (cfg.kernels and compensator is not None
+                  and compensator.sparsifies):
+                # The sparse payload is what transport delivers, even with
+                # zero delay — unpack the split gvec rather than gmean.
+                agg = tm.tree_unpack(gvec, spec, dtype=jnp.float32)
             else:
-                agg = gmean
+                agg = gmean if cfg.kernels else to_buffer
             staleness = jnp.zeros((p,), jnp.int32)
         elif cfg.per_worker_delays:
             d = source.delays(kdelay, state.step, (p,))
@@ -258,11 +426,6 @@ def make_stale_train_step(
 
         mean_stale = staleness.astype(jnp.float32).mean()
         comp = comp_box[0]
-        if compensator is not None and compensator.sparsifies and not cmetrics:
-            # Tree layout, or the kernels s=0 / aggregate shortcuts that
-            # never route through kernel_agg: split via the packed tree view.
-            agg, comp, cm = compensator.sparsify_tree(comp, agg)
-            cmetrics.update(cm)
         delta, opt_state = optimizer.update(agg, state.opt_state, state.params)
         if compensator is not None and compensator.scales:
             factor = compensator.lr_factor(comp, mean_stale, state.step)
@@ -310,20 +473,117 @@ class SyncTrainState:
     step: jax.Array
 
 
-def init_sync_state(params: Pytree, optimizer: Optimizer) -> SyncTrainState:
-    return SyncTrainState(params=params, opt_state=optimizer.init(params),
+def _sync_fuses(params: Pytree) -> bool:
+    """Sync has no ring delivery to fuse with, so the packed megakernel tail
+    only pays when the packed pass reaches a real kernel — on oversized
+    interpret-mode operands the pack/unpack copies are pure overhead over
+    the per-leaf path (the ``update_fused`` convention; the ring modes keep
+    the megakernel regardless because collapsing three passes into one wins
+    even on the ref oracle)."""
+    width = tm.padded_size(tm.pack_spec(params).total, dispatch.PACK_ALIGN)
+    return dispatch.fuses(4 * width)
+
+
+def init_sync_state(params: Pytree, optimizer: Optimizer,
+                    fused: bool = False) -> SyncTrainState:
+    if fused and _sync_fuses(params):
+        # Megakernel layout: Adam moments packed at the ring width (see
+        # init_state) so the fused pass aliases them in place.
+        width = tm.padded_size(tm.pack_spec(params).total,
+                               dispatch.PACK_ALIGN)
+        opt_state = {"step": jnp.int32(0),
+                     "m": jnp.zeros((width,), jnp.float32),
+                     "v": jnp.zeros((width,), jnp.float32)}
+    else:
+        opt_state = optimizer.init(params)
+    return SyncTrainState(params=params, opt_state=opt_state,
                           step=jnp.int32(0))
 
 
 def make_sync_train_step_lean(loss_fn, optimizer: Optimizer,
-                              compensator=None):
-    def step(state: SyncTrainState, batch, comp: Pytree = None):
-        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+                              compensator=None, fused: bool = False):
+    """Buffer-free synchronous step. ``fused=True`` runs the post-gradient
+    tail as ONE pass over the packed [D] view: the EF split (when
+    compressing) happens in-kernel via ``dispatch.fused_update`` (the
+    gradient plays a single fresh row of weight 1.0 — delivery is exact),
+    the dense case routes straight to ``dispatch.fused_adam``, and the Adam
+    moments live packed in opt_state — requires an optimizer with an Adam
+    spec (``optimizers.adam().spec``). Where the packed pass would run the
+    jnp ref oracle anyway (``_sync_fuses`` false: oversized interpret-mode
+    operands), the step keeps the per-leaf tail — packing with nothing to
+    fuse against is pure copy overhead."""
+    if fused:
+        spec_ = optimizer.spec if hasattr(optimizer, "spec") else None
+        if not (spec_ and spec_.get("name") == "adam"):
+            raise ValueError(
+                "fused=True needs an optimizer with an Adam spec "
+                "(optimizers.adam(...)); got an opaque optimizer")
+
+    def fused_tail(state, loss, grads, comp):
+        spec = tm.pack_spec(state.params)
+        gvec = tm.tree_pack(grads, pad_to=dispatch.PACK_ALIGN)
         cmetrics = {}
-        if compensator is not None:
+        factor = jnp.float32(1.0)
+        if compensator is not None and compensator.scales:
             # Staleness is identically 0 here, so "inverse" is a no-op and
             # "theorem1" reduces to its pure schedule factor — sync stays
             # the s=0 reference point of the compensated sweeps.
+            factor = compensator.lr_factor(comp, jnp.float32(0.0), state.step)
+            cmetrics["lr_scale"] = factor
+        osp = optimizer.spec
+        ostep = state.opt_state["step"] + 1
+        eta = lr_at(osp["lr"], ostep)
+        m, v = state.opt_state["m"], state.opt_state["v"]
+        pzero = jnp.zeros_like(m)
+        adam_kw = dict(lr=eta, b1=osp["b1"], b2=osp["b2"], eps=osp["eps"],
+                       step=ostep, scale=factor)
+        if compensator is not None and compensator.sparsifies:
+            acc, thr, mom_in = compensator.ef_inputs(comp, gvec, spec.total)
+            outs = dispatch.fused_update(
+                pzero, m, v, jnp.zeros((1, gvec.shape[-1]), jnp.float32),
+                jnp.ones((1,), jnp.float32), acc=acc[None],
+                thr=jnp.reshape(thr, (1,)),
+                fresh=jnp.ones((1,), jnp.float32),
+                mom=None if mom_in is None else mom_in[None], **adam_kw)
+            dneg, m2, v2, u, sent, resid = outs[:6]
+            mom_out = outs[6][0] if mom_in is not None else None
+            comp = compensator.ef_commit(comp, resid[0], mom_out)
+            cmetrics.update(compensator.ef_metrics(sent, spec.total))
+        else:
+            # No ring and no EF split: delivery would be the identity (one
+            # fresh row at weight 1.0), so skip the delivery pass and run
+            # the packed Adam kernel alone, folding the LR factor into eta
+            # (``scale`` only ever multiplies the delta).
+            dneg, m2, v2 = dispatch.fused_adam(
+                pzero, m, v, gvec, factor * eta, osp["b1"], osp["b2"],
+                osp["eps"], ostep)
+        delta32 = tm.tree_unpack(dneg, spec, dtype=jnp.float32)
+        wd = osp["weight_decay"]
+        swd = factor * eta * wd if wd else None
+
+        def delta_leaf(dl, pp):
+            if swd is not None:
+                dl = dl - swd * pp
+            return dl.astype(pp.dtype)
+
+        delta = jax.tree.map(delta_leaf, delta32, state.params)
+        params = tm.tree_add(state.params, delta)
+        new_state = SyncTrainState(
+            params=params, opt_state={"step": ostep, "m": m2, "v": v2},
+            step=state.step + 1)
+        if compensator is not None:
+            return new_state, comp, {"loss": loss, **cmetrics}
+        return new_state, {"loss": loss}
+
+    def step(state: SyncTrainState, batch, comp: Pytree = None):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        # _sync_fuses is trace-time static (width + dispatch config), and
+        # init_sync_state applies the same predicate — layouts agree.
+        if fused and _sync_fuses(state.params):
+            return fused_tail(state, loss, grads, comp)
+        cmetrics = {}
+        if compensator is not None:
+            # See the fused tail's note: sync is the s=0 reference point.
             grads, comp, cmetrics = compensator.sparsify_tree(comp, grads)
         delta, opt_state = optimizer.update(grads, state.opt_state, state.params)
         if compensator is not None and compensator.scales:

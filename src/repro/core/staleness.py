@@ -182,6 +182,7 @@ def make_sim_step(
     cfg: StalenessConfig,
     server_apply: Optional[ServerApply] = None,
     compensator=None,
+    fused: Optional[dict] = None,
 ):
     """Build one jit-able engine step: ``step(state, batches) -> (state, metrics)``.
 
@@ -196,9 +197,24 @@ def make_sim_step(
     per-worker [P, D] packed residual. The step then takes/returns the comp
     state (``(state, comp, metrics)``); ``compensator=None`` keeps the
     legacy signature and bitwise behavior.
+
+    ``fused`` (requires ``kernels=True``) replaces the vmapped ``update_fn``
+    with the megakernel compute stage: per-worker gradients come from
+    ``jax.vmap(jax.value_and_grad(fused["loss"]))`` and ALL P workers' Adam
+    moment/delta math runs as ONE ``dispatch.fused_adam`` pass over the
+    flattened [P*D] packed view, with the moments stored PACKED in
+    ``update_state = {"m": [P, D], "v": [P, D]}`` fp32 — no per-step
+    pack/unpack of optimizer state, and the packed delta rows feed transport
+    directly (pack∘elementwise == elementwise∘pack, so this is bitwise the
+    packed-step trajectory for fp32 params). Keys of ``fused``: ``loss``,
+    ``takes_key`` (loss consumes a PRNG key), ``lr``, ``b1``, ``b2``,
+    ``eps``, ``weight_decay``.
     """
     if cfg.server_side and server_apply is None:
         raise ValueError("server_side=True requires a server_apply transform")
+    if fused is not None and not cfg.kernels:
+        raise ValueError("fused simulate step requires kernels=True "
+                         "(the megakernel runs over the packed ring)")
     p = cfg.num_workers
     slots = cfg.buffer_slots
     source = cfg.delay.realize(num_workers=p)
@@ -284,6 +300,83 @@ def make_sim_step(
             return new_state, comp, metrics
         return new_state, metrics
 
+    def packed_fused_step(state: SimState, batches: Pytree,
+                          bound: Optional[jax.Array] = None,
+                          comp: Pytree = None) -> Tuple[SimState, dict]:
+        from repro.kernels import dispatch
+        from repro.optim.optimizers import lr_at
+        key, kdelay, kupd = jax.random.split(state.key, 3)
+        pspec = tm.pack_spec(state.caches, lead_ndim=1)
+        ring = state.pending["ring"]
+
+        # 1. deliver (identical to packed_step).
+        arrived = state.pending["arrived"]                       # [P, D]
+        cvec = tm.tree_pack(state.caches, lead_ndim=1,
+                            pad_to=dispatch.PACK_ALIGN)          # [P, D] fp32
+        flat = dispatch.stale_accum(cvec.reshape(-1),
+                                    arrived.reshape(1, -1),
+                                    jnp.ones((1,), jnp.float32))
+        cflat = flat.reshape(p, -1)                              # [P, D]
+        caches = tm.tree_unpack(cflat, pspec)
+
+        # 2. compute: per-worker gradients, then ALL P Adam updates in one
+        #    fused pass over the flattened packed view. The moments stay
+        #    packed in update_state ([P, D] fp32), read/written exactly
+        #    once; the delta rows ARE the packed transport payload.
+        worker_keys = jax.random.split(kupd, p)
+
+        def grad_one(cache, batch, wkey):
+            if fused["takes_key"]:
+                return jax.value_and_grad(fused["loss"])(cache, batch, wkey)
+            return jax.value_and_grad(fused["loss"])(cache, batch)
+
+        losses, grads = jax.vmap(grad_one)(caches, batches, worker_keys)
+        gvec = tm.tree_pack(grads, lead_ndim=1,
+                            pad_to=dispatch.PACK_ALIGN)          # [P, D]
+        m, v = state.update_state["m"], state.update_state["v"]
+        ostep = state.step + 1        # every worker steps once per iteration
+        eta = lr_at(fused["lr"], ostep)
+        dneg, m2, v2 = dispatch.fused_adam(
+            jnp.zeros((m.size,), jnp.float32), m.reshape(-1), v.reshape(-1),
+            gvec.reshape(-1), eta, fused["b1"], fused["b2"], fused["eps"],
+            ostep)
+        uvec = dneg.reshape(p, -1)                               # [P, D]
+        wd = fused["weight_decay"]
+        if wd:
+            # Decoupled decay against the post-delivery cache each gradient
+            # was computed at — the packed image of the per-leaf AdamW rule.
+            uvec = uvec - eta * wd * cflat
+        update_state = {"m": m2.reshape(p, -1), "v": v2.reshape(p, -1)}
+        metrics = {"loss": losses}
+
+        # 3. dispatch (identical to packed_step).
+        delays = source.delays(kdelay, state.step, (p, p))
+        if bound is not None:
+            delays = jnp.minimum(delays, jnp.asarray(bound, jnp.int32))
+        if compensator is not None:
+            uvec, comp, cmetrics = compensate(
+                comp, uvec, delays, state.step, packed_true_size=pspec.total)
+            metrics = {**metrics, **cmetrics}
+        cursor = jnp.mod(state.step, slots)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, jnp.zeros_like(arrived)[:, None], cursor, axis=1)
+        slot = jnp.mod(state.step + 1 + delays, slots)           # [src, dst]
+        dst = jnp.broadcast_to(jnp.arange(p)[None, :], (p, p))
+        ring = ring.at[dst, slot].add(
+            jnp.broadcast_to(uvec[:, None, :], (p, p) + uvec.shape[-1:])
+            .astype(ring.dtype))
+        arrived_next = jax.lax.dynamic_index_in_dim(
+            ring, jnp.mod(state.step + 1, slots), axis=1, keepdims=False)
+
+        new_state = SimState(
+            caches=caches,
+            pending={"ring": ring, "arrived": arrived_next},
+            update_state=update_state, server_state=state.server_state,
+            step=state.step + 1, key=key)
+        if compensator is not None:
+            return new_state, comp, metrics
+        return new_state, metrics
+
     def step(state: SimState, batches: Pytree,
              bound: Optional[jax.Array] = None,
              comp: Pytree = None) -> Tuple[SimState, dict]:
@@ -333,6 +426,8 @@ def make_sim_step(
             return new_state, comp, metrics
         return new_state, metrics
 
+    if fused is not None:
+        return packed_fused_step
     return packed_step if cfg.kernels else step
 
 

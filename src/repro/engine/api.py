@@ -89,6 +89,18 @@ class EngineConfig:
     # bitwise-identical to the uncompensated engine.
     lr_scale: str = "none"
     compress: str = "none"
+    # DGC-style masked momentum correcting the EF sparsifier (beta in
+    # [0, 1); 0 = plain EF). Needs compress != "none"; the masked velocity
+    # rides in EngineState.comp next to the residual.
+    ef_momentum: float = 0.0
+    # One-pass fused update megakernel (repro.kernels.dispatch.fused_update):
+    # EF split, stale delivery, and the Adam moment/param update run as a
+    # single pass over the packed [D] view with the Adam moments stored
+    # packed in the optimizer state. "auto" engages wherever supported (an
+    # Adam-spec optimizer on a packed delivery path — or sync mode under the
+    # same placement gate as `kernels`) and falls back to the three-dispatch
+    # path otherwise; "on" raises where unsupported; "off" never fuses.
+    megakernel: str = "auto"
     # stale-psum extras (see StaleSyncConfig):
     per_worker_delays: bool = True
     buffer_dtype: Any = jnp.float32
@@ -112,9 +124,14 @@ class EngineConfig:
         if self.kernels not in ("off", "auto", "on"):
             raise ValueError(f"kernels must be 'off'|'auto'|'on', "
                              f"got {self.kernels!r}")
-        # Validates lr_scale/compress grammar (raises on bad specs).
+        if self.megakernel not in ("off", "auto", "on"):
+            raise ValueError(f"megakernel must be 'off'|'auto'|'on', "
+                             f"got {self.megakernel!r}")
+        # Validates lr_scale/compress/ef_momentum grammar (raises on bad
+        # specs).
         compensate_lib.CompensateConfig(lr_scale=self.lr_scale,
-                                        compress=self.compress, s=self.s)
+                                        compress=self.compress, s=self.s,
+                                        ef_momentum=self.ef_momentum)
         object.__setattr__(self, "delay", delays_lib.as_spec(self.delay))
         if self.delay is not None:
             if self.mode == "sync" and getattr(self.delay, "bound", None) != 0:
@@ -400,15 +417,46 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
     # so the default path hands compensator=None to the core step builders —
     # the exact pre-compensation code, bitwise (tested in the engine matrix).
     ccfg = compensate_lib.CompensateConfig(
-        lr_scale=cfg.lr_scale, compress=cfg.compress, s=cfg.s)
+        lr_scale=cfg.lr_scale, compress=cfg.compress, s=cfg.s,
+        ef_momentum=cfg.ef_momentum)
     compensator = compensate_lib.Compensator(ccfg) if ccfg.active else None
     init_comp = None
     if compensator is not None:
         meta["compensate"] = {"lr_scale": cfg.lr_scale,
                               "compress": cfg.compress}
-        comp_workers = cfg.num_workers if mode == "simulate" else None
+        if cfg.ef_momentum:
+            meta["compensate"]["ef_momentum"] = cfg.ef_momentum
+        # Sparsification runs per SOURCE before transport, so the EF state
+        # follows the source layout: [P, D] rows wherever each worker emits
+        # its own payload (simulate, and the per-worker-delay ring modes),
+        # one [D] row for the aggregate/sync forms.
+        per_source = (mode == "simulate"
+                      or (mode in ("stale-psum", "ssp")
+                          and cfg.per_worker_delays))
+        comp_workers = cfg.num_workers if per_source else None
         init_comp = lambda params: compensator.init(
             params, num_workers=comp_workers)
+
+    def resolve_mega(supported: bool, why_not: str) -> bool:
+        """Resolve the megakernel knob against this engine's placement.
+        Records the verdict in meta; 'on' refuses unsupported placements."""
+        if cfg.megakernel == "off":
+            meta["kernels"]["megakernel"] = "off"
+            return False
+        sp = getattr(optimizer, "spec", None) if optimizer is not None else None
+        if not (sp and sp.get("name") == "adam"):
+            supported, why_not = False, "optimizer has no Adam spec"
+        if not supported:
+            if cfg.megakernel == "on":
+                raise ValueError(
+                    f"megakernel='on' is unsupported here: {why_not}; use "
+                    "megakernel='auto' (falls back to the three-dispatch "
+                    "path)")
+            meta["kernels"]["megakernel"] = "off"
+            meta["kernels"]["megakernel_fallback"] = why_not
+            return False
+        meta["kernels"]["megakernel"] = "fused"
+        return True
 
     def _finish(engine: Engine) -> Engine:
         if mesh is not None and shape is not None:
@@ -419,6 +467,7 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
         return engine
 
     if mode == "simulate":
+        custom_update = update_fn is not None
         if update_fn is None:
             if loss is None or optimizer is None:
                 raise ValueError("simulate mode needs (loss, optimizer) or "
@@ -426,18 +475,38 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
             make = (optlib.make_stochastic_update_fn if cfg.loss_takes_key
                     else optlib.make_sgd_update_fn)
             update_fn = make(loss, optimizer)
+        if custom_update:
+            mega = resolve_mega(False, "custom update_fn (opaque update math)")
+        elif cfg.server_side:
+            mega = resolve_mega(False, "server_side transform")
+        else:
+            mega = resolve_mega(kernel_delivery, why or "tree delivery")
         sim_cfg = staleness.StalenessConfig(
             num_workers=cfg.num_workers,
             delay=cfg.delay or UniformDelay(cfg.s),
             server_side=cfg.server_side,
             kernels=kernel_delivery)
+        fused_kw = None
+        if mega:
+            sp = optimizer.spec
+            fused_kw = dict(loss=loss, takes_key=cfg.loss_takes_key,
+                            lr=sp["lr"], b1=sp["b1"], b2=sp["b2"],
+                            eps=sp["eps"], weight_decay=sp["weight_decay"])
         raw = staleness.make_sim_step(update_fn, sim_cfg,
                                       server_apply=server_apply,
-                                      compensator=compensator)
+                                      compensator=compensator,
+                                      fused=fused_kw)
 
         def init_inner(params, update_state, key):
             if update_state is None:
-                update_state = optimizer.init(params)
+                if mega:
+                    # Megakernel layout: per-worker Adam moments live packed
+                    # ([P, D] after the worker broadcast) — see make_sim_step.
+                    width = staleness._packed_width(params)
+                    update_state = {"m": jnp.zeros((width,), jnp.float32),
+                                    "v": jnp.zeros((width,), jnp.float32)}
+                else:
+                    update_state = optimizer.init(params)
             return staleness.init_sim_state(params, update_state, sim_cfg, key)
 
         def sim_step_inner(inner, batch, bound, comp):
@@ -460,8 +529,13 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
     if mode == "sync":
         if loss is None or optimizer is None:
             raise ValueError("sync mode needs (loss, optimizer)")
+        # sync has no ring, but the megakernel still wins the packed-Adam
+        # fusion — gated by the same placement verdict as `kernels`.
+        sync_ok, sync_why = kernel_placement_ok(cfg.kernels, arch, mesh)
+        mega = resolve_mega(sync_ok, sync_why or "kernels='off'")
         raw = stale_sync.make_sync_train_step_lean(loss, optimizer,
-                                                   compensator=compensator)
+                                                   compensator=compensator,
+                                                   fused=mega)
 
         def sync_step_inner(inner, batch, _bound, comp):
             if compensator is None:
@@ -472,7 +546,7 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
         return _finish(Engine(
             cfg=cfg, mesh=mesh, meta=meta,
             _init_inner=lambda params, _ust, _key:
-                stale_sync.init_sync_state(params, optimizer),
+                stale_sync.init_sync_state(params, optimizer, fused=mega),
             _step_inner=sync_step_inner,
             _params_of=lambda inner: inner.params,
             _init_params=init_params,
@@ -483,6 +557,7 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
     # gradient ring-buffer modes: stale-psum and ssp.
     if loss is None or optimizer is None:
         raise ValueError(f"{mode} mode needs (loss, optimizer)")
+    mega = resolve_mega(kernel_delivery, why or "tree delivery")
     if mode == "ssp":
         if cfg.delay is not None:
             # Trace/Schedule specs replace the sampled lognormal speed model
@@ -514,7 +589,7 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
         scfg = stale_sync.StaleSyncConfig(
             num_workers=cfg.num_workers, s=cfg.s + 1,
             buffer_dtype=cfg.buffer_dtype, delay_table=table,
-            kernels=kernel_delivery)
+            kernels=kernel_delivery, fused_update=mega)
         meta["ssp_schedule"] = table
         max_bound = cfg.s
     else:
@@ -539,7 +614,7 @@ def build_engine(api_or_loss, optimizer: Optional[optlib.Optimizer],
             delay_table=table,
             buffer_dtype=cfg.buffer_dtype,
             per_worker_delays=cfg.per_worker_delays,
-            kernels=kernel_delivery)
+            kernels=kernel_delivery, fused_update=mega)
         eff_bound = spec.bound if spec is not None else scfg.delay.bound
         if eff_bound > scfg.slots - 1:
             # A delay the ring can't hold would silently wrap onto a much

@@ -275,14 +275,17 @@ def attach_train_plan(engine: Engine, api: ModelAPI, shape: ShapeLike, *,
         batch_struct, batch_sh = _batch_struct_and_shardings(
             api, shape, mesh, rules)
 
-    # Compensation state (repro.compensate): simulate's per-worker [P, D]
-    # error-feedback residual shards its leading worker axis like every
-    # other per-worker buffer (the packed D axis mixes leaves, so only the
-    # worker axis can shard); aggregate residuals and the scalar mu/L
-    # signals replicate. Donation below covers it — the residual is
-    # rewritten in place every step, exactly like the gradient ring.
+    # Compensation state (repro.compensate): sparsification runs per SOURCE
+    # before transport, so every per-source mode (simulate and the
+    # per-worker-delay ring modes) carries [P, D] error-feedback
+    # residual/momentum rows — 2-D comp leaves — which shard their leading
+    # worker axis like every other per-worker buffer (the packed D axis
+    # mixes leaves, so only the worker axis can shard). Aggregate [D]
+    # residuals and the scalar mu/L signals replicate. Donation below
+    # covers it — the EF state is rewritten in place every step, exactly
+    # like the gradient ring.
     def comp_shard(leaf):
-        if cfg.mode == "simulate" and getattr(leaf, "ndim", 0) == 2:
+        if getattr(leaf, "ndim", 0) == 2:
             return _lead(mesh, wax, None)
         return _replicated(mesh)
 

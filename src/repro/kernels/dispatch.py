@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.kernels import coherence as _co
 from repro.kernels import flash_attention as _fl
 from repro.kernels import fused_adam as _fa
+from repro.kernels import fused_update as _fu
 from repro.kernels import ref
 from repro.kernels import sparsify as _sp
 from repro.kernels import stale_accum as _sa
@@ -195,12 +196,43 @@ def fused_adam(p, m, v, g, lr, b1=0.9, b2=0.999, eps=1e-8, step=1,
                block_d: int = 2048):
     """One fused Adam step over flat [D] views -> (p', m', v')."""
     d = p.shape[-1]
-    backend = _backend("fused_adam", d, d > 0 and d % block_d == 0,
+    # Size the interpret-max guard on TOTAL touched elements (4 [D] inputs),
+    # matching stale_accum's s*d / coherence_dots' w*d convention.
+    backend = _backend("fused_adam", 4 * d, d > 0 and d % block_d == 0,
                        f"D={d} % block_d={block_d}")
     if backend == "ref":
         return ref.fused_adam(p, m, v, g, lr, b1, b2, eps, step)
     return _fa.fused_adam(p, m, v, g, lr, b1, b2, eps, step, block_d=block_d,
                           interpret=backend == "pallas-interpret")
+
+
+def fused_update(p, m, v, stale, weights, lr, b1=0.9, b2=0.999, eps=1e-8,
+                 step=1, scale=1.0, acc=None, thr=None, fresh=None, mom=None,
+                 block_d: int = 2048):
+    """One-pass fused step over packed flat [D] views: optional EF split of
+    the R source rows (``acc``/``thr``; DGC masked momentum via ``mom``),
+    weighted delivery of ring rows ``stale`` with per-row ``fresh`` flags
+    selecting this step's ``sent`` over the gathered ring row, and the
+    bias-corrected Adam update with the compensator LR factor folded in as
+    ``scale``. Returns ``(p', m', v', u)`` (+ ``sent, resid`` with EF,
+    + ``mom'``). Falls back to the composed jnp oracle when D isn't a
+    block_d multiple or the total operand size exceeds the interpret cap."""
+    d = p.shape[-1]
+    n = 3 * d + stale.size
+    if acc is not None:
+        n += acc.size
+    if mom is not None:
+        n += mom.size
+    backend = _backend("fused_update", n, d > 0 and d % block_d == 0,
+                       f"D={d} % block_d={block_d}")
+    if backend == "ref":
+        return ref.fused_update(p, m, v, stale, weights, lr, b1, b2, eps,
+                                step, scale, acc=acc, thr=thr, fresh=fresh,
+                                mom=mom)
+    scalars = _fu._stack_scalars(lr, b1, b2, eps, step, scale)
+    return _fu.fused_update(p, m, v, stale, weights, scalars, acc=acc,
+                            thr=thr, fresh=fresh, mom=mom, block_d=block_d,
+                            interpret=backend == "pallas-interpret")
 
 
 def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128):

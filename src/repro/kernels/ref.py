@@ -45,6 +45,43 @@ def fused_adam(p, m, v, g, lr, b1, b2, eps, step):
     return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
 
 
+def fused_update(p, m, v, stale, weights, lr, b1, b2, eps, step, scale=1.0,
+                 acc=None, thr=None, fresh=None, mom=None):
+    """One-pass update oracle: the ``sparsify_mask`` split (optional, with
+    DGC masked momentum), the ``stale_accum`` weighted delivery with a fresh
+    mask, and the ``fused_adam`` formula with the LR-compensation factor
+    folded in (``p' = p - scale * update``). Returns ``(p', m', v', u)``
+    plus ``(sent, resid)`` when ``acc``/``thr`` are given and ``mom'`` when
+    ``mom`` is. All math fp32."""
+    w32 = weights.astype(jnp.float32)
+    st32 = stale.astype(jnp.float32)
+    extras = ()
+    if acc is None:
+        u = jnp.einsum("s,sd->d", w32, st32)
+    else:
+        a32 = acc.astype(jnp.float32)
+        t32 = jnp.asarray(thr, jnp.float32)[..., None]
+        keep = jnp.abs(a32) >= t32
+        sent = jnp.where(keep, a32, 0.0)
+        resid = a32 - sent
+        extras = (sent.astype(acc.dtype), resid.astype(acc.dtype))
+        if mom is not None:
+            mom_new = jnp.where(keep, 0.0, mom.astype(jnp.float32))
+            extras += (mom_new.astype(mom.dtype),)
+        delivered = jnp.where(fresh.astype(jnp.float32)[:, None] > 0,
+                              sent, st32)
+        u = jnp.einsum("s,sd->d", w32, delivered)
+    m_new = b1 * m.astype(jnp.float32) + (1 - b1) * u
+    v_new = b2 * v.astype(jnp.float32) + (1 - b2) * u * u
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+    update = jnp.asarray(scale, jnp.float32) * (
+        lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps))
+    p_new = p.astype(jnp.float32) - update
+    return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+            v_new.astype(v.dtype), u) + extras
+
+
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     scale: float | None = None):
     """Naive attention oracle. q [B,Sq,H,hd], k/v [B,Sk,Hkv,hd]; GQA via

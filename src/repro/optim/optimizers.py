@@ -25,10 +25,18 @@ Schedule = Union[float, Callable[[jax.Array], jax.Array]]
 class Optimizer(NamedTuple):
     init: Callable[[Pytree], Pytree]
     update: Callable[[Pytree, Pytree, Pytree], tuple]
+    # Hyperparameter spec for optimizers whose update math can be driven by
+    # the one-pass fused megakernel (``dispatch.fused_update``). ``None``
+    # means the optimizer is opaque: engines must call ``update``.
+    spec: Any = None
 
 
 def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
     return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+# Engines driving the fused megakernel resolve schedules outside the kernel.
+lr_at = _lr_at
 
 
 def sgd(lr: Schedule = 0.01) -> Optimizer:
@@ -120,7 +128,7 @@ def adam(lr: Schedule = 0.001, b1: float = 0.9, b2: float = 0.999,
         from repro.kernels import dispatch
         spec = tm.pack_spec(params)
         pad = dispatch.PACK_ALIGN
-        if not dispatch.fuses(tm.padded_size(spec.total, pad)):
+        if not dispatch.fuses(4 * tm.padded_size(spec.total, pad)):
             # Packing exists to feed the fused kernel; when dispatch would
             # fall back to the jnp oracle anyway (interpret mode, oversized
             # operand), the per-leaf path IS the reference — skip the copies.
@@ -161,7 +169,9 @@ def adam(lr: Schedule = 0.001, b1: float = 0.9, b2: float = 0.999,
         delta = jax.tree.map(delta_leaf, m, v, params)
         return delta, {"step": step, "m": m, "v": v}
 
-    return Optimizer(init, update_fused if kernel else update)
+    return Optimizer(init, update_fused if kernel else update,
+                     spec=dict(name="adam", lr=lr, b1=b1, b2=b2, eps=eps,
+                               weight_decay=weight_decay))
 
 
 _REGISTRY = {

@@ -110,6 +110,34 @@ def test_sampled_topk_threshold_hits_target_sparsity():
     np.testing.assert_array_equal(np.asarray(sent + resid), np.asarray(vec))
 
 
+def test_sampled_topk_threshold_ignores_packed_padding():
+    """Regression (PR 7): the sampled-threshold path used to stride over the
+    PADDED width — the zero pad tail landed in the subsample and ``ks`` was
+    scaled by the padded d, both dragging the estimated threshold down
+    (over-keeping). The threshold must depend only on the true prefix:
+    bitwise-equal whether the vector arrives exact-width or packed with a
+    dominating pad tail."""
+    true_size = compensate.EXACT_TOPK_MAX + 500   # just over the exact cutoff
+    padded = -(-true_size // 2048) * 2048 * 2     # pad tail ~= true width
+    rng = np.random.default_rng(7)
+    vec = jnp.asarray(np.abs(rng.standard_normal(true_size)), jnp.float32)
+    k = true_size // 10
+    thr_exact = compensate.topk_threshold(vec, k, true_size)
+    thr_padded = compensate.topk_threshold(
+        jnp.concatenate([vec, jnp.zeros((padded - true_size,), jnp.float32)]),
+        k, true_size)
+    np.testing.assert_array_equal(np.asarray(thr_exact),
+                                  np.asarray(thr_padded))
+    # And end-to-end: realized sparsity (computed over true_size) still
+    # tracks the 90% target even when padding dominates the packed width.
+    sent, resid, sparsity = compensate.sparsify_with_feedback(
+        jnp.concatenate([vec * jnp.asarray(
+            rng.choice([-1.0, 1.0], true_size), jnp.float32),
+            jnp.zeros((padded - true_size,), jnp.float32)])[None],
+        jnp.zeros((1, padded), jnp.float32), "topk", 0.1, true_size)
+    assert 0.85 <= float(sparsity) <= 0.95, float(sparsity)
+
+
 def test_dispatch_sparsify_matches_ref_divisible_and_odd():
     rng = np.random.default_rng(1)
     for rows, d in ((1, 2048), (3, 1024), (2, 100)):   # last: odd -> ref
@@ -207,14 +235,16 @@ def test_coherence_hook_feeds_theorem1_signals():
 
 @pytest.mark.parametrize("mode", ("sync", "stale-psum", "ssp", "simulate"))
 def test_residual_rides_engine_state(mode):
-    """The packed EF residual lives in EngineState.comp ([P, D] per-worker
-    in simulate, [D] otherwise), starts zero, and becomes non-trivial."""
+    """The packed EF residual lives in EngineState.comp and follows the
+    SOURCE layout (sparsification runs per source worker before transport):
+    [P, D] rows wherever each worker emits its own payload, [D] for the
+    aggregate/sync forms. Starts zero, becomes non-trivial."""
     p = 4
     eng = build_engine(quad_loss, sgd(0.05), EngineConfig(
         mode=mode, num_workers=p, s=3, ssp_steps=8, compress="topk:0.25"))
     st = eng.init(jax.random.PRNGKey(0), params={"w": jnp.zeros((6,))})
     width = tm.padded_size(6, dispatch.PACK_ALIGN)
-    expect = (p, width) if mode == "simulate" else (width,)
+    expect = (width,) if mode == "sync" else (p, width)
     assert st.comp["resid"].shape == expect
     np.testing.assert_array_equal(np.asarray(st.comp["resid"]), 0.0)
     for t in range(3):

@@ -245,7 +245,155 @@ def test_matrix_compensation_modes():
         assert all(np.isfinite(l) for l in losses), (mode, losses)
         _, replay = run_combo(eng)
         assert losses == replay, mode
-        assert state.comp["resid"].ndim == (2 if mode == "simulate" else 1)
+        # Residuals live in SOURCE layout since the pre-transport compression
+        # change (PR 7): sparsification runs per worker BEFORE the ring
+        # write, so every mode with per-source gradients carries [P, D]
+        # residuals; only sync (one aggregate stream) keeps the flat [D].
+        assert state.comp["resid"].ndim == (1 if mode == "sync" else 2)
+
+
+# ---------------------------------------------------------------------------
+# One-pass fused-update megakernel (PR 7): the whole post-gradient tail
+# (EF split -> weighted stale delivery -> Adam) as ONE dispatch.fused_update
+# pass over the packed [D] view. The toy below packs to exactly one 2048
+# block so the interpret-mode Pallas kernel actually executes on CPU.
+# ---------------------------------------------------------------------------
+
+def _toy_mega_engine(mode, megakernel, **kw):
+    from repro.engine.api import EngineConfig, build_engine
+
+    def loss(params, batch):
+        pred = batch["x"] @ params["w"] + jnp.sum(params["b"])
+        return jnp.mean(pred ** 2)
+
+    cfg = EngineConfig(mode=mode, num_workers=2,
+                       s=(0 if mode == "sync" else 2),
+                       kernels="auto", megakernel=megakernel, **kw)
+    eng = build_engine(loss, optlib.adam(lr=0.05, kernel=True), cfg)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (300,),
+                                     jnp.float32),
+              "b": jnp.full((5,), 0.1, jnp.float32)}
+    return eng, params
+
+
+def _run_toy(eng, params, mode, steps=5):
+    state = eng.init(jax.random.PRNGKey(1), params=params)
+    key, metrics = jax.random.PRNGKey(2), None
+    for _ in range(steps):
+        key, kb = jax.random.split(key)
+        x = jax.random.normal(kb, (4, 300), jnp.float32)
+        batch = ({"x": x.reshape(2, 2, 300)} if mode == "simulate"
+                 else {"x": x})
+        state, metrics = eng.step(state, batch)
+    return state, metrics
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_megakernel_matches_three_dispatch(mode):
+    """megakernel="on" tracks the three-dispatch kernel path it replaces
+    within fp32 tolerance — dense AND with the EF compensator active (where
+    the residual trajectories must agree too)."""
+    for kw in ({}, dict(compress="topk:0.25", lr_scale="inverse")):
+        e_off, params = _toy_mega_engine(mode, "off", **kw)
+        e_on, _ = _toy_mega_engine(mode, "on", **kw)
+        assert e_on.meta["kernels"]["megakernel"] == "fused"
+        assert e_off.meta["kernels"]["megakernel"] == "off"
+        s_off, m_off = _run_toy(e_off, params, mode)
+        s_on, m_on = _run_toy(e_on, params, mode)
+        np.testing.assert_allclose(float(m_off["loss"]),
+                                   float(m_on["loss"]), rtol=1e-5)
+        for a, b in zip(jax.tree.leaves(e_off.params(s_off)),
+                        jax.tree.leaves(e_on.params(s_on))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-4)
+        for a, b in zip(jax.tree.leaves(s_off.comp),
+                        jax.tree.leaves(s_on.comp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-4)
+
+
+def test_megakernel_off_compensation_none_is_bitwise_inert():
+    """With megakernel="off" the kernel path is the pre-PR-7 three-dispatch
+    step: an explicit compress="none"/lr_scale="none" engine is BITWISE
+    identical to one built with no compensation knobs at all — the
+    pre-transport compression plumbing must vanish, not merely no-op, when
+    the compensator is off. (megakernel defaults to "auto", which resolves
+    to "fused" on this kernel-eligible toy — pin it "off" for the PR 6
+    baseline identity.)"""
+    for mode in MODES:
+        e_def, params = _toy_mega_engine(mode, "off")
+        e_none, _ = _toy_mega_engine(mode, "off", compress="none",
+                                     lr_scale="none")
+        e_auto, _ = _toy_mega_engine(mode, "auto")
+        assert e_auto.meta["kernels"]["megakernel"] == "fused", mode
+        s_def, m_def = _run_toy(e_def, params, mode)
+        s_none, m_none = _run_toy(e_none, params, mode)
+        assert float(m_def["loss"]) == float(m_none["loss"]), mode
+        assert s_none.comp == ()
+        for a, b in zip(jax.tree.leaves(e_def.params(s_def)),
+                        jax.tree.leaves(e_none.params(s_none))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_megakernel_momentum_ef_replay_deterministic(mode="stale-psum"):
+    """The DGC-style momentum-corrected EF variant (ef_momentum > 0) carries
+    masked momentum in EngineState.comp and replays bitwise from a fixed
+    seed through the megakernel."""
+    for mode in MODES:
+        e1, params = _toy_mega_engine(mode, "on", compress="topk:0.25",
+                                      ef_momentum=0.5)
+        e2, _ = _toy_mega_engine(mode, "on", compress="topk:0.25",
+                                 ef_momentum=0.5)
+        s1, m1 = _run_toy(e1, params, mode)
+        s2, m2 = _run_toy(e2, params, mode)
+        assert "mom" in s1.comp and "resid" in s1.comp, mode
+        assert float(m1["loss"]) == float(m2["loss"]), mode
+        for a, b in zip(jax.tree.leaves(e1.params(s1)),
+                        jax.tree.leaves(e2.params(s2))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(s1.comp), jax.tree.leaves(s2.comp)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_update_ef_conservation_exact():
+    """EF conservation holds BITWISE inside the megakernel: sent + resid'
+    == acc on every coordinate, masked coordinates send exactly zero, and
+    the DGC momentum is zeroed exactly on kept coordinates — on both the
+    Pallas-interpret path (D = 4096) and the odd-width ref fallback
+    (D = 4095)."""
+    from repro.kernels import dispatch
+
+    R = 3
+    for d in (4096, 4095):
+        ks = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(3), d), 6)
+        p = jax.random.normal(ks[0], (d,))
+        m = jax.random.normal(ks[1], (d,)) * 0.1
+        v = jax.random.uniform(ks[2], (d,)) * 0.01
+        stale = jax.random.normal(ks[3], (R, d))
+        acc = jax.random.normal(ks[4], (R, d))
+        mom = jax.random.normal(ks[5], (R, d))
+        thr = jnp.full((R,), 0.8, jnp.float32)
+        fresh = jnp.array([1.0, 0.0, 1.0], jnp.float32)
+        w = jnp.full((R,), 1.0 / R, jnp.float32)
+        keep = np.abs(np.asarray(acc)) >= 0.8
+
+        outs = dispatch.fused_update(p, m, v, stale, w, 0.05, step=1,
+                                     acc=acc, thr=thr, fresh=fresh)
+        assert len(outs) == 6
+        _, _, _, _, sent, resid = outs
+        np.testing.assert_array_equal(np.asarray(sent) + np.asarray(resid),
+                                      np.asarray(acc))
+        assert (np.asarray(sent)[~keep] == 0).all()
+
+        outs = dispatch.fused_update(p, m, v, stale, w, 0.05, step=1,
+                                     acc=acc, thr=thr, fresh=fresh, mom=mom)
+        assert len(outs) == 7
+        _, _, _, _, sent, resid, mom_out = outs
+        np.testing.assert_array_equal(np.asarray(sent) + np.asarray(resid),
+                                      np.asarray(acc))
+        assert (np.asarray(mom_out)[keep] == 0).all()
+        np.testing.assert_array_equal(np.asarray(mom_out)[~keep],
+                                      np.asarray(mom)[~keep])
 
 
 def test_matrix_two_device_sharded():
@@ -281,6 +429,18 @@ def test_matrix_two_device_sharded():
             assert all(np.isfinite(l) for l in losses), (mode, losses)
             _, replay = M.run_combo(engine)
             assert losses == replay, mode
+        # PR 7: compression runs per source worker BEFORE the ring write —
+        # the packed gbuf slot holds the SPARSE sent payload (zeros where
+        # the EF mask dropped coordinates), not the dense gradient.
+        eng = M.make_engine("mamba2-1.3b", "stale-psum", mesh, kernels="on",
+                            compress="topk:0.25")
+        assert eng.meta["kernels"]["megakernel"] == "fused", eng.meta
+        state, losses = M.run_combo(eng, steps=1)
+        assert all(np.isfinite(l) for l in losses), losses
+        ring = np.asarray(state.inner.gbuf)          # packed [slots, P, D]
+        row = ring[np.abs(ring).sum(axis=(1, 2)).argmax()]
+        frac_zero = float((row == 0).mean())
+        assert frac_zero > 0.5, frac_zero
         print("MATRIX2_OK")
     """)
     env = dict(os.environ)

@@ -255,6 +255,44 @@ def test_donated_step_replays_deterministically():
     assert run() == run()
 
 
+def test_interpret_cutoff_counts_total_touched_elements():
+    """Regression (PR 7): ``fused_adam`` used to size the interpret-max
+    guard on D alone while ``stale_accum`` counted s*d — a packed width
+    whose delivery already fell back to the ref oracle could still push a
+    4x-that-footprint Adam kernel through interpret mode. Every dispatcher
+    now counts TOTAL touched elements, so the ref cutoff lands at the same
+    footprint across ops."""
+    import dataclasses
+
+    old = dispatch.CONFIG
+    d = 2048
+    try:
+        # Cap exactly at fused_adam's 4-operand footprint for width d.
+        dispatch.CONFIG = dataclasses.replace(old,
+                                              interpret_max_elements=4 * d)
+        ks = jax.random.split(jax.random.PRNGKey(6), 4)
+        p, m, v, g = (jax.random.normal(k, (d,)) for k in ks)
+        v = jnp.abs(v)
+        dispatch.reset_report()
+        dispatch.fused_adam(p, m, v, g, 1e-3, step=1)
+        # 4 [D] operands AT the cap -> the kernel still runs...
+        assert dispatch.report()["fused_adam"].startswith("pallas")
+        dispatch.fused_adam(*(jnp.tile(a, 2) for a in (p, m, v, g)),
+                            1e-3, step=1)
+        # ...and one block past it falls back, even though 2*d alone is
+        # far under the cap (the pre-fix sizing).
+        assert dispatch.report()["fused_adam"].startswith("ref")
+        # Cutoff agreement: stale_accum's s*d footprint flips at the same
+        # total — 4 buffer rows sit AT the cap, 5 fall back.
+        dispatch.stale_accum(p, jnp.stack([g] * 4), jnp.ones((4,)) / 4)
+        assert dispatch.report()["stale_accum"].startswith("pallas")
+        dispatch.stale_accum(p, jnp.stack([g] * 5), jnp.ones((5,)) / 5)
+        assert dispatch.report()["stale_accum"].startswith("ref")
+    finally:
+        dispatch.CONFIG = old
+        dispatch.reset_report()
+
+
 def test_interpret_env_config_read_once():
     """REPRO_KERNELS_INTERPRET is honored at import with no module-global
     mutation (and ops.INTERPRET is gone)."""
