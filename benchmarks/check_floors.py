@@ -16,6 +16,10 @@ future reruns) and never lowers one. Tracked groups:
                         baseline (stale-psum).
 * ``mega_speedups``   — the one-pass fused-update megakernel vs the
                         three-dispatch kernel path it replaces, per mode.
+* ``serving``         — the serve plane (``BENCH_serving.json``, "paged"
+                        leg): paged-route tokens/s and ``paged_speedup``
+                        (in-place paged decode + batched prefill admission
+                        vs the gather reference with per-request prefill).
 
 The sync floors sit BELOW 1.0 by design: sync is a parity leg — the two
 variants compile to the same step (no ring to deliver, and on oversized
@@ -32,11 +36,15 @@ import math
 import sys
 
 BENCH = "experiments/BENCH_engine_step.json"
+BENCH_SERVING = "experiments/BENCH_serving.json"
 FLOORS = "experiments/BENCH_floors.json"
 # floors-file group -> per-mode key in the bench record.
 KEYS = (("speedups", "speedup"),
         ("sparse_speedups", "sparse_speedup"),
         ("mega_speedups", "mega_speedup"))
+# floors-file "serving" keys -> keys in BENCH_serving.json's "paged" leg.
+SERVING_KEYS = (("tokens_per_s", "paged_tokens_per_s"),
+                ("paged_speedup", "paged_speedup"))
 
 
 def measured(bench: dict) -> dict:
@@ -49,23 +57,37 @@ def measured(bench: dict) -> dict:
     return out
 
 
+def measured_serving(bench: dict) -> dict:
+    """Extract {"serving": {key: value}} from a BENCH_serving record."""
+    paged = bench.get("paged") or {}
+    return {"serving": {floor_key: paged[bench_key]
+                        for floor_key, bench_key in SERVING_KEYS
+                        if paged.get(bench_key) is not None}}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--update", action="store_true",
                     help="ratchet floors UP to the committed bench record "
                          "(floors never move down)")
     ap.add_argument("--bench", default=BENCH)
+    ap.add_argument("--serving-bench", default=BENCH_SERVING)
     ap.add_argument("--floors", default=FLOORS)
     args = ap.parse_args(argv)
 
     with open(args.bench) as f:
         got = measured(json.load(f))
+    try:
+        with open(args.serving_bench) as f:
+            got.update(measured_serving(json.load(f)))
+    except FileNotFoundError:
+        got["serving"] = {}
     with open(args.floors) as f:
         floors = json.load(f)
 
     if args.update:
-        for group, _ in KEYS:
-            for mode, val in got.get(group, {}).items():
+        for group, vals in got.items():
+            for mode, val in vals.items():
                 old = floors.setdefault(group, {}).get(mode, 0.0)
                 # Truncate (not round): the new floor sits at or below the
                 # measurement, leaving rerun noise headroom.
@@ -77,19 +99,19 @@ def main(argv=None) -> int:
         return 0
 
     failures, checked = [], 0
-    for group, _ in KEYS:
-        for mode, floor in floors.get(group, {}).items():
+    for group, modes in floors.items():
+        for mode, floor in modes.items():
             val = got.get(group, {}).get(mode)
             checked += 1
             if val is None:
                 failures.append(f"{group}/{mode}: floor {floor} committed "
-                                f"but no measurement in {args.bench}")
+                                f"but no measurement committed")
             elif val < floor:
                 failures.append(f"{group}/{mode}: {val} < floor {floor}")
             else:
                 print(f"ok  {group}/{mode}: {val} >= {floor}")
     if failures:
-        print("ENGINE-STEP RATCHET FAILED (committed bench below floors):")
+        print("BENCH RATCHET FAILED (committed bench below floors):")
         for line in failures:
             print("  " + line)
         print("If the regression is intentional, re-run the bench on a "

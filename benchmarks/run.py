@@ -62,10 +62,18 @@ def refresh_summary(name: str, timestamp: str, result=None,
             if mega:
                 headline["mega_speedups"] = mega
     if name == "serving":
-        sweep = (result or {}).get("sweep")
-        if sweep is None and src and os.path.exists(src):
+        record = result
+        if record is None and src and os.path.exists(src):
             with open(src) as f:
-                sweep = json.load(f).get("sweep", [])
+                record = json.load(f)
+        record = record or {}
+        sweep = record.get("sweep")
+        # The serve-plane perf leg (PR 8): paged route vs the gather
+        # reference, ratchet-guarded by check_floors' "serving" group.
+        paged = record.get("paged") or {}
+        if "paged_speedup" in paged:
+            headline["paged_speedup"] = paged["paged_speedup"]
+            headline["paged_tokens_per_s"] = paged["paged_tokens_per_s"]
         if sweep:
             # tokens/s headline next to the engine-step speedups, plus the
             # staleness span the refresh-period knob covered.

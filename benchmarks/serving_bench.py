@@ -14,11 +14,30 @@ budget isn't part of the measurement, exactly like the engine-step bench
 isolates step cost from data loading. The live-Trainer integration runs in
 the `python -m repro.serving` smoke.
 
+Since PR 8 the record also carries the serve-plane perf legs the ratchet
+gate (`benchmarks/check_floors.py`, group "serving") guards:
+
+* ``paged``      — identical request stream through the gather->decode->
+                   scatter reference vs the in-place paged decode route
+                   (``ServingConfig.paged``), with batched prefill admission
+                   on both sides: tokens/s each way, ``paged_speedup``,
+                   TTFT p99, and per-phase (admit/prefill/decode) wall time.
+* ``overcommit`` — ``max_seq`` past what the page pool could hold eagerly
+                   (``num_pages`` << slots * pages_per_slot): only the lazy
+                   paged route can serve this at all.
+
+On CPU the paged-attention kernel would run under the Pallas interpreter
+(grid replayed sequentially in Python) — that times the interpreter, not the
+serving plane — so this bench caps the interpreter size at 0, routing the
+kernel to its jnp ref oracle (same math; the dispatched backend is recorded
+in the result). Real-TPU runs ignore the cap and time the compiled kernel.
+
 Writes experiments/BENCH_serving.json; `benchmarks/run.py --only serving`
 rolls the tokens/s headline into BENCH_summary.json.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import threading
@@ -28,6 +47,7 @@ import jax
 
 from repro import treemath as tm
 from repro.checkpoint import checkpoint as ckpt
+from repro.kernels import dispatch
 from repro.serving import (Server, ServingConfig, synthetic_requests,
                            uniform_arrivals)
 
@@ -80,12 +100,108 @@ def _serve_point(cfg: ServingConfig, params, snap_dir: str,
     }
 
 
+def _warm_server(server: Server, cfg: ServingConfig) -> None:
+    """Compile every jitted shape the measured run can hit: each power-of-two
+    prefill width admission may chunk to, plus the decode step."""
+    b = 1
+    while b <= server.cfg.prefill_batch:
+        reqs = synthetic_requests(b, cfg.prompt_len, 2,
+                                  server.api.vocab_real, seed=5)
+        server._get_prefill(cfg.prompt_len, b)(
+            server.params, server._prefill_inputs(reqs, cfg.prompt_len))
+        b *= 2
+    # A full-width burst also warms the eager admission ops (slice_batch /
+    # pack_rows / write_rows) at every batch shape the measured run hits.
+    server.run(synthetic_requests(cfg.slots * 2, cfg.prompt_len, 2,
+                                  server.api.vocab_real, seed=5))
+
+
+def _bench_paged(cfg: ServingConfig, params, n_requests: int, gen: int):
+    """This PR's serve plane vs the one it replaces, same request stream:
+
+    * ``gather`` — the legacy plane: per-request (batch-1) prefill admission
+      feeding the gather->decode->scatter reference route.
+    * ``paged``  — batched prefill admission (up to ``slots`` per jitted
+      call) feeding the in-place paged decode route.
+
+    Both sides are fully warmed first, so the ratio measures steady-state
+    serving, not compiles. The leg runs at a prompt-heavy operating point
+    (prompt 128, short generations) — the regime continuous batching admits
+    under load — where per-request prefill is the legacy plane's real cost."""
+    out: dict = {"routes": {}}
+    cfg = dataclasses.replace(cfg, prompt_len=256, max_seq=272)
+    gen = 8
+    n_requests = max(n_requests, 24)  # long enough to average load noise
+    for name, mode, pfb in (("gather", "off", 1),
+                            ("paged", "auto", cfg.slots)):
+        c = dataclasses.replace(cfg, paged=mode, prefill_batch=pfb)
+        server = Server(c, params=params)
+        _warm_server(server, cfg)
+        # One burst (all requests pre-arrived): the wall clock is pure
+        # serving work, not arrival pacing. Best-of-3 runs per leg — the
+        # usual timing-bench guard against scheduler noise.
+        reqs = synthetic_requests(
+            n_requests, cfg.prompt_len, gen, server.api.vocab_real, seed=11)
+        s = max((server.run(list(reqs)).summary() for _ in range(3)),
+                key=lambda r: r["tokens_per_s"])
+        out["routes"][name] = server.paged_route
+        out[f"{name}_tokens_per_s"] = s["tokens_per_s"]
+        out[f"{name}_prefill_calls"] = s["prefill_calls"]
+        out[f"{name}_ttft_p99_s"] = s["ttft_p99_s"]
+        if name == "paged":
+            out["tokens_per_s"] = s["tokens_per_s"]
+            out["ttft_p99_s"] = s["ttft_p99_s"]
+            out["phase_s"] = s["phase_s"]
+            out["prefill_calls"] = s["prefill_calls"]
+            out["backend"] = dispatch.report().get("paged_attention")
+    out["paged_speedup"] = round(
+        out["paged_tokens_per_s"] / max(out["gather_tokens_per_s"], 1e-9), 3)
+    return out
+
+
+def _bench_overcommit(cfg: ServingConfig, params, gen: int):
+    """Serve max_seq the eager pool could NOT hold: lazy paged allocation
+    claims only the pages each request touches."""
+    c = dataclasses.replace(cfg, max_seq=96, num_pages=24, paged="on",
+                            prefill_batch=cfg.slots)
+    server = Server(c, params=params)
+    reqs = synthetic_requests(
+        cfg.slots * 2, cfg.prompt_len, gen, server.api.vocab_real,
+        arrivals=uniform_arrivals(cfg.slots * 2, 0.01), seed=13)
+    rep = server.run(reqs)
+    eager_pages = c.slots * server.layout.pages_per_slot
+    assert server.cache.num_pages < eager_pages, "overcommit leg not over"
+    return {
+        "max_seq": c.max_seq,
+        "num_pages": server.cache.num_pages,
+        "eager_pages_required": eager_pages,
+        "requests_completed": len(rep.completed),
+        "tokens_per_s": rep.summary()["tokens_per_s"],
+    }
+
+
 def main(quick: bool = True, out: str = "experiments/BENCH_serving.json"):
     import tempfile
     n_requests = 8 if quick else 32
     gen = 16 if quick else 32
     cfg = ServingConfig(arch=ARCH, reduced=True, slots=4, prompt_len=16,
-                        max_seq=48, page_tokens=8, temperature=0.0, seed=0)
+                        max_seq=48, page_tokens=8, temperature=0.0, seed=0,
+                        prefill_batch=4)
+
+    # Keep the Pallas interpreter out of the timed loops (see module
+    # docstring) — on CPU the paged-attention kernel dispatches to its ref
+    # oracle instead; compiled-TPU dispatch is unaffected.
+    cfg_saved = dispatch.CONFIG
+    dispatch.CONFIG = dataclasses.replace(cfg_saved, interpret_max_elements=0)
+    try:
+        return _main(quick, out, cfg, n_requests, gen)
+    finally:
+        dispatch.CONFIG = cfg_saved
+
+
+def _main(quick: bool, out: str, cfg: ServingConfig, n_requests: int,
+          gen: int):
+    import tempfile
 
     # Warm the jit caches (and build the publisher's params) once so the
     # first sweep point isn't charged the compile.
@@ -93,6 +209,9 @@ def main(quick: bool = True, out: str = "experiments/BENCH_serving.json"):
     warm.run(synthetic_requests(2, cfg.prompt_len, 2,
                                 warm.api.vocab_real, seed=3))
     params = warm.params
+
+    paged = _bench_paged(cfg, params, n_requests, gen)
+    overcommit = _bench_overcommit(cfg, params, gen)
 
     snap_dir = tempfile.mkdtemp(prefix="serving_bench_")
     pub = _Publisher(snap_dir, params, period_s=0.03 if quick else 0.1)
@@ -110,14 +229,24 @@ def main(quick: bool = True, out: str = "experiments/BENCH_serving.json"):
         "arch": ARCH,
         "config": {"slots": cfg.slots, "prompt_len": cfg.prompt_len,
                    "max_seq": cfg.max_seq, "page_tokens": cfg.page_tokens,
+                   "prefill_batch": cfg.prefill_batch,
                    "requests": n_requests, "gen": gen,
                    "publish_period_s": pub.period_s,
                    "publisher_steps": pub.step},
+        "paged": paged,
+        "overcommit": overcommit,
         "sweep": sweep,
     }
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(result, f, indent=1)
+    print(f"paged[{paged['backend']}]: {paged['paged_tokens_per_s']:.1f} "
+          f"vs gather {paged['gather_tokens_per_s']:.1f} tok/s "
+          f"(x{paged['paged_speedup']}), ttft_p99 {paged['ttft_p99_s']}s, "
+          f"phases {paged['phase_s']}")
+    print(f"overcommit: {overcommit['requests_completed']} requests at "
+          f"max_seq={overcommit['max_seq']} on {overcommit['num_pages']} "
+          f"pages (eager needs {overcommit['eager_pages_required']})")
     for pt in sweep:
         print(f"refresh_every={pt['refresh_every_steps']:>2}: "
               f"{pt['tokens_per_s']:>7.1f} tok/s  "

@@ -47,6 +47,11 @@ class ModelAPI:
     batch_spec: Callable    # (InputShape) -> dict[str, ShapeDtypeStruct]
     batch_axes: Callable    # (InputShape) -> dict[str, tuple]  logical axes
     vocab_real: int
+    # (params, token [S,1], cache, pos [S], kv) -> (logits, 1-token cache):
+    # in-place paged decode against a serving.cache.PagedKV page pool.
+    # None = family has no paged path (the serve planner falls back to the
+    # gather->decode->scatter route).
+    decode_paged: Optional[Callable] = None
 
 
 def _token_batch(shape: InputShape, extra: Optional[dict] = None,
@@ -91,6 +96,8 @@ def transformer_api(cfg) -> ModelAPI:
         prefill=prefill,
         decode=lambda params, token, cache, pos: tr.decode_step(
             params, token, cache, pos, cfg),
+        decode_paged=lambda params, token, cache, pos, kv: tr.decode_step_paged(
+            params, token, cache, pos, kv, cfg),
         init_cache=lambda b, s: tr.init_cache(cfg, b, s),
         batch_spec=lambda shape: batch_spec(shape)[0],
         batch_axes=lambda shape: batch_spec(shape)[1],
@@ -181,6 +188,8 @@ def encdec_api(cfg) -> ModelAPI:
         prefill=prefill,
         decode=lambda params, token, cache, pos: encdec.decode_step(
             params, token, cache, pos, cfg),
+        decode_paged=lambda params, token, cache, pos, kv: encdec.decode_step_paged(
+            params, token, cache, pos, kv, cfg),
         init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
         batch_spec=lambda shape: batch_spec(shape)[0],
         batch_axes=lambda shape: batch_spec(shape)[1],

@@ -466,30 +466,77 @@ def plan_decode(arch: Union[str, ArchDef], shape: ShapeLike, mesh,
     )
 
 
+def resolve_serve_paged(api: ModelAPI, layout, arch=None, mesh=None,
+                        paged: str = "auto"):
+    """Resolve the serve decode route -> ``(route, why)`` with route one of
+    ``"paged"`` (in-place page-table attention kernel), ``"gather"`` (the
+    gather -> decode -> scatter reference), or ``"resident"`` (no token-major
+    leaves at all — SSM state rewrites wholesale; trivially "in place").
+
+    ``paged`` follows the training kernels' tri-state: ``"off"`` forces the
+    gather reference, ``"auto"`` takes the paged path only where the same
+    ``kernel_placement_ok`` verdict would fuse a training kernel (and the
+    model family implements ``decode_paged``), ``"on"`` overrides the
+    model-axis veto and raises where the paged path cannot run at all."""
+    if paged not in ("off", "auto", "on"):
+        raise ValueError(f"paged={paged!r}: expected off/auto/on")
+    if not layout.has_tokens:
+        return "resident", "no token-major cache leaves"
+    if paged == "off":
+        return "gather", "config off"
+    if api.decode_paged is None:
+        if paged == "on":
+            raise ValueError(
+                f"paged='on' but family {api.family!r} has no decode_paged")
+        return "gather", f"family {api.family!r} has no decode_paged"
+    from repro.engine.api import kernel_placement_ok
+    ok, why = kernel_placement_ok(paged, arch, mesh)
+    if not ok:
+        if paged == "on":
+            raise ValueError(f"paged='on' vetoed by placement: {why}")
+        return "gather", why
+    return "paged", ""
+
+
 def plan_serve_step(arch: Union[str, ArchDef], shape: ShapeLike, mesh, *,
                     layout, num_pages: int,
                     overrides: Optional[dict] = None,
-                    reduced: bool = False) -> Plan:
+                    reduced: bool = False, paged: str = "off") -> Plan:
     """Continuous-batching decode step for the serving plane.
 
     One jitted call advances every occupied slot by one token against the
     paged cache (``repro.serving.cache.PageLayout`` — passed duck-typed to
-    keep the planner model-agnostic): page-table gather -> per-slot batch-1
-    ``api.decode`` under ``vmap`` (each slot carries its own position, which
-    the shared-scalar-``pos`` decode contract can't express batch-wide) ->
-    cursor-addressed page scatter. Slots excluded by ``mask`` still occupy
-    lanes but are inert: their sampled token is discarded and their cache
-    write is routed to the null page, so membership changes between steps
-    never retrace. The page and resident buffers are donated — the cache is
-    updated in place like the engine's gradient ring.
+    keep the planner model-agnostic). Two routes, resolved by
+    :func:`resolve_serve_paged` from ``paged="off"|"auto"|"on"``:
+
+    * **gather** (the bitwise reference): page-table gather -> per-slot
+      batch-1 ``api.decode`` under ``vmap`` (each slot carries its own
+      position, which the shared-scalar-``pos`` decode contract can't
+      express batch-wide) -> cursor-addressed whole-page scatter.
+    * **paged**: resident leaves unpack, but the K/V ring stays put —
+      ``api.decode_paged`` reads it in place through the page-table
+      attention kernel (``kernels/paged_attention``) and the step scatters
+      ONE [W] row per slot instead of a whole page. Null-page table entries
+      are masked in-kernel, so slots may hold only the pages their request
+      touches (lazy allocation) and ``max_seq`` is no longer bounded by what
+      a slot's gathered contiguous ring can hold.
+
+    Slots excluded by ``mask`` still occupy lanes but are inert: their
+    sampled token is discarded and their cache write is routed to the null
+    page, so membership changes between steps never retrace. The page and
+    resident buffers are donated — the cache is updated in place like the
+    engine's gradient ring.
 
     ``shape.global_batch`` is the slot count; ``temp`` <= 0 selects greedy
     argmax, > 0 temperature sampling (one fold-in key per slot).
     """
+    from repro.kernels import dispatch
     arch, shape, api = _resolve(arch, shape, reduced, overrides)
     assert shape.kind == "decode", shape.name
     rules = rules_lib.rules_for_arch(arch.arch_id, shape=shape, mesh=mesh)
     slots = shape.global_batch
+    route, route_why = resolve_serve_paged(api, layout, arch, mesh, paged)
+    dispatch.note("serve_decode", route, route_why)
 
     params_shapes, params_axes = captured_axes(api.init)
     params_sh = _shardings(params_axes, mesh, rules)
@@ -524,8 +571,28 @@ def plan_serve_step(arch: Union[str, ArchDef], shape: ShapeLike, mesh, *,
             pages, resident, new_caches, tables, pos, mask)
         return jnp.where(mask, next_tok, tokens), pages, resident
 
+    def serve_step_paged(params, pages, resident, tables, tokens, pos, mask,
+                         key, temp):
+        cache = layout.unpack_resident(resident)         # token leaves None
+        kv = layout.paged_kv(pages, tables, pos)
+        logits, new_cache = api.decode_paged(params, tokens[:, None],
+                                             cache, pos, kv)
+        logits = logits[:, -1].astype(jnp.float32)
+        keys = jax.random.split(key, slots)
+
+        def one(lg, k):                                   # mirrors the
+            greedy = jnp.argmax(lg).astype(i32)           # gather route's
+            sampled = jax.random.categorical(             # per-slot draws
+                k, lg / jnp.maximum(temp, 1e-6)).astype(i32)
+            return jnp.where(temp > 0.0, sampled, greedy)
+
+        next_tok = jax.vmap(one)(logits, keys)
+        pages, resident = layout.scatter_rows(
+            pages, resident, new_cache, tables, pos, mask)
+        return jnp.where(mask, next_tok, tokens), pages, resident
+
     return Plan(
-        fn=serve_step,
+        fn=serve_step_paged if route == "paged" else serve_step,
         args=(params_shapes, pages_struct, res_struct, tables_struct,
               vec(i32), vec(i32), vec(jnp.bool_), key_struct, temp_struct),
         in_shardings=(params_sh, rep, rep, rep, rep, rep, rep, rep, rep),
@@ -535,7 +602,8 @@ def plan_serve_step(arch: Union[str, ArchDef], shape: ShapeLike, mesh, *,
               "slots": slots, "seq_len": shape.seq_len,
               "cache_tokens": layout.tokens,
               "page_tokens": layout.page_tokens,
-              "pages": num_pages, "resident_width": layout.res_width},
+              "pages": num_pages, "resident_width": layout.res_width,
+              "paged": route, "paged_why": route_why},
     )
 
 

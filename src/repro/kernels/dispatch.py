@@ -43,6 +43,7 @@ from repro.kernels import coherence as _co
 from repro.kernels import flash_attention as _fl
 from repro.kernels import fused_adam as _fa
 from repro.kernels import fused_update as _fu
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ref
 from repro.kernels import sparsify as _sp
 from repro.kernels import stale_accum as _sa
@@ -233,6 +234,38 @@ def fused_update(p, m, v, stale, weights, lr, b1=0.9, b2=0.999, eps=1e-8,
     return _fu.fused_update(p, m, v, stale, weights, scalars, acc=acc,
                             thr=thr, fresh=fresh, mom=mom, block_d=block_d,
                             interpret=backend == "pallas-interpret")
+
+
+def paged_attention(q, k_new, v_new, pages, tables, pos, layer, *,
+                    k_off, v_off, kv_heads, head_dim, tokens, page_tokens,
+                    window=0, softmax_dtype=jnp.float32):
+    """Serve-decode attention read straight out of the packed page pool
+    (``serving/cache.py``). Divisibility contract: the per-layer K/V column
+    block ``Hkv*hd`` must be lane-aligned (a 128 multiple) and both leaf
+    offsets must be whole blocks, so each (page, layer) tile is one
+    BlockSpec block; GQA needs even head groups. Anything odd falls back to
+    the jnp oracle (bitwise-equal to the gather->decode path)."""
+    s, h, hd = q.shape
+    kvsz = kv_heads * head_dim
+    pps = tables.shape[1]
+    ok = (kv_heads > 0 and h % kv_heads == 0 and kvsz % 128 == 0
+          and k_off % kvsz == 0 and v_off % kvsz == 0)
+    n = s * (pps * page_tokens + 1) * kvsz * 2
+    backend = _backend(
+        "paged_attention", n, ok,
+        f"kvsz={kvsz}%128 / k_off={k_off} v_off={v_off} % kvsz / "
+        f"H={h}%Hkv={kv_heads}")
+    if backend == "ref":
+        return ref.paged_attention(
+            q, k_new, v_new, pages, tables, pos, layer, k_off=k_off,
+            v_off=v_off, kv_heads=kv_heads, head_dim=head_dim, tokens=tokens,
+            page_tokens=page_tokens, window=window,
+            softmax_dtype=softmax_dtype)
+    return _pa.paged_attention(
+        q, k_new, v_new, pages, tables, pos, layer, k_off=k_off, v_off=v_off,
+        kv_heads=kv_heads, head_dim=head_dim, tokens=tokens,
+        page_tokens=page_tokens, window=window,
+        interpret=backend == "pallas-interpret")
 
 
 def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128):

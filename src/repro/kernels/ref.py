@@ -82,6 +82,61 @@ def fused_update(p, m, v, stale, weights, lr, b1, b2, eps, step, scale=1.0,
             v_new.astype(v.dtype), u) + extras
 
 
+def paged_attention(q, k_new, v_new, pages, tables, pos, layer, *,
+                    k_off: int, v_off: int, kv_heads: int, head_dim: int,
+                    tokens: int, page_tokens: int, window: int = 0,
+                    softmax_dtype=jnp.float32):
+    """Page-table decode attention oracle. q [S,H,hd]; k_new/v_new [S,Hkv,hd]
+    (cache dtype); pages [P+1,T,W] packed pool (null page = P); tables
+    [S,PPS]; pos [S]; ``layer`` a traced scalar picking the per-layer K/V
+    column block at ``k_off + layer * Hkv*hd``.
+
+    Mirrors the gather->decode path's ``_attend`` numerics exactly: the
+    per-layer columns are gathered through the page table into contiguous
+    [S,C] rings, the new token lands on the ring cursor ``pos % C``, and the
+    validity mask is the ring invariant computed analytically —
+    ``spos(r) = pos-1-((pos-1-r) % C)`` equals the stored ``slot_pos`` for
+    every written row and goes negative (or falls out of the window) for
+    empty rows and the overwritten cursor row. Null-page rows (lazy
+    allocation) are masked the same way."""
+    s, h, hd = q.shape
+    hkv = kv_heads
+    g = h // hkv
+    kvsz = hkv * hd
+    c = tokens
+    null = pages.shape[0] - 1
+    sdt = softmax_dtype
+
+    kcols = jax.lax.dynamic_slice_in_dim(pages, k_off + layer * kvsz, kvsz, 2)
+    vcols = jax.lax.dynamic_slice_in_dim(pages, v_off + layer * kvsz, kvsz, 2)
+    # [S, PPS, T, kvsz] -> contiguous ring rows [S, C, Hkv, hd] (padded tail
+    # rows of the last page fall off the [:c] slice, like layout.gather).
+    kg = kcols[tables].reshape(s, -1, hkv, hd)[:, :c].astype(k_new.dtype)
+    vg = vcols[tables].reshape(s, -1, hkv, hd)[:, :c].astype(v_new.dtype)
+    cur = pos % c
+    sidx = jnp.arange(s)
+    kg = kg.at[sidx, cur].set(k_new.astype(kg.dtype))
+    vg = vg.at[sidx, cur].set(v_new.astype(vg.dtype))
+
+    rows = jnp.arange(c)
+    spos = pos[:, None] - 1 - ((pos[:, None] - 1 - rows[None, :]) % c)
+    page_ok = tables[:, rows // page_tokens] != null
+    valid = page_ok & (spos >= 0)
+    if window:
+        valid = valid & (spos > pos[:, None] - window)
+    valid = valid | (rows[None, :] == cur[:, None])
+
+    qg = q.reshape(s, 1, hkv, g, hd)
+    scores = jnp.einsum("bsngd,bknd->bngsk", qg, kg,
+                        preferred_element_type=sdt)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, sdt))
+    neg = jnp.asarray(-3e38 if sdt == jnp.float32 else -3e4, sdt)
+    scores = jnp.where(valid[:, None, None, None, :], scores, neg)
+    probs = jax.nn.softmax(scores.astype(sdt), axis=-1).astype(vg.dtype)
+    out = jnp.einsum("bngsk,bknd->bsngd", probs, vg)
+    return out.reshape(s, h, hd)
+
+
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     scale: float | None = None):
     """Naive attention oracle. q [B,Sq,H,hd], k/v [B,Sk,Hkv,hd]; GQA via

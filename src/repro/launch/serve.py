@@ -46,6 +46,14 @@ def main():
                     help="with --params: hot-swap newer snapshots every N "
                          "decode steps (0 = serve one snapshot)")
     ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--paged", choices=("off", "auto", "on"), default="auto",
+                    help="serve decode route: 'off' forces the gather "
+                         "reference, 'auto' takes the in-place paged "
+                         "attention kernel where placement allows, 'on' "
+                         "requires it")
+    ap.add_argument("--prefill-batch", type=int, default=None, metavar="B",
+                    help="max requests prefilled per jitted admission call "
+                         "(default: the slot count)")
     args = ap.parse_args()
 
     cfg = ServingConfig(
@@ -53,10 +61,18 @@ def main():
         prompt_len=args.prompt_len, max_seq=args.prompt_len + args.gen,
         page_tokens=args.page_tokens,
         temperature=0.0 if args.greedy else args.temperature,
-        seed=args.seed, mesh=args.mesh)
+        seed=args.seed, mesh=args.mesh, paged=args.paged,
+        prefill_batch=(args.batch if args.prefill_batch is None
+                       else args.prefill_batch))
     server = Server(cfg)
     api = server.api
     mcfg = api.cfg
+
+    rep = server.dispatch_report()
+    why = f" ({rep['why']})" if rep["why"] else ""
+    print(f"serve dispatch: paged={rep['paged']}{why}")
+    for op, backend in rep["decisions"].items():
+        print(f"  {op:<16} -> {backend}")
 
     base_step = 0
     if args.params:

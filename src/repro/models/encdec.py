@@ -110,6 +110,13 @@ def decode_step(params, token, cache, pos, cfg: EncDecConfig):
     return tr.decode_step(params["decoder"], token, cache, pos, cfg.decoder_cfg())
 
 
+def decode_step_paged(params, token, cache, pos, kv, cfg: EncDecConfig):
+    """Paged decode: self-attention K/V read in place from the page pool;
+    the prefilled cross-K/V rides in the resident cache leaves."""
+    return tr.decode_step_paged(params["decoder"], token, cache, pos, kv,
+                                cfg.decoder_cfg())
+
+
 def loss_fn(params, batch, cfg: EncDecConfig):
     """batch: {"tokens": [B, S+1], "frames": [B, num_frames, d_model]}."""
     tokens = batch["tokens"]

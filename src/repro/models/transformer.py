@@ -398,6 +398,19 @@ def _cross_attention(p, x, xk, xv, cfg: TransformerConfig):
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
 
 
+def _cross_decode_apply(h, xp, xk, xv, cfg: TransformerConfig):
+    """One cross layer at decode time (prefilled cross-K/V). h [B,1,d]."""
+    a_in = L.rms_norm(h, xp["ln1"], cfg.norm_eps)
+    x_out = _cross_attention(xp["xattn"], a_in, xk, xv, cfg)
+    h2 = h + jnp.tanh(xp["gate"]).astype(h.dtype) * x_out
+    f_in = L.rms_norm(h2, xp["ln2"], cfg.norm_eps)
+    gate = jnp.einsum("bsd,df->bsf", f_in, xp["mlp"]["w_gate"].astype(cfg.dtype))
+    up = jnp.einsum("bsd,df->bsf", f_in, xp["mlp"]["w_up"].astype(cfg.dtype))
+    y = jnp.einsum("bsf,fd->bsd", L.swiglu(gate, up),
+                   xp["mlp"]["w_down"].astype(cfg.dtype))
+    return h2 + y
+
+
 def _cross_kv(p, feats, cfg: TransformerConfig):
     dt = cfg.dtype
     k = jnp.einsum("bsd,dhk->bshk", feats.astype(dt), p["wk"].astype(dt))
@@ -574,17 +587,6 @@ def decode_step(params, token, cache, pos, cfg: TransformerConfig):
             self_cache)
         c_tail = jax.tree.map(lambda x: x[ng * period:], self_cache)
 
-        def cross_apply(h, xp, xk, xv):
-            a_in = L.rms_norm(h, xp["ln1"], cfg.norm_eps)
-            x_out = _cross_attention(xp["xattn"], a_in, xk, xv, cfg)
-            h2 = h + jnp.tanh(xp["gate"]).astype(h.dtype) * x_out
-            f_in = L.rms_norm(h2, xp["ln2"], cfg.norm_eps)
-            gate = jnp.einsum("bsd,df->bsf", f_in, xp["mlp"]["w_gate"].astype(cfg.dtype))
-            up = jnp.einsum("bsd,df->bsf", f_in, xp["mlp"]["w_up"].astype(cfg.dtype))
-            y = jnp.einsum("bsf,fd->bsd", L.swiglu(gate, up),
-                           xp["mlp"]["w_down"].astype(cfg.dtype))
-            return h2 + y
-
         def group_body(carry, xs):
             h = carry
             group_layers, gcache, xp, xk, xv = xs
@@ -597,7 +599,7 @@ def decode_step(params, token, cache, pos, cfg: TransformerConfig):
             h, upd = jax.lax.scan(
                 self_step, h,
                 (group_layers, gcache["k"], gcache["v"], gcache["slot_pos"]))
-            h = cross_apply(h, xp, xk, xv)
+            h = _cross_decode_apply(h, xp, xk, xv, cfg)
             return h, upd
 
         h, upd_head = jax.lax.scan(
@@ -630,6 +632,96 @@ def decode_step(params, token, cache, pos, cfg: TransformerConfig):
     if cfg.logit_softcap:
         logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
     vmask = jnp.where(jnp.arange(cfg.vocab) < cfg.vocab_real, 0.0, NEG_INF)
+    return logits + vmask.astype(logits.dtype), new_cache
+
+
+def decode_step_paged(params, token, cache, pos, kv, cfg: TransformerConfig):
+    """Batched-position decode against the in-place page pool.
+
+    token [S,1] int32; pos [S] int32 (one absolute position per slot —
+    unlike :func:`decode_step`'s shared scalar, so one call serves a whole
+    continuous batch). ``cache`` carries only the length-independent leaves
+    (``xk``/``xv``; the K/V ring leaves arrive as ``None`` — their data
+    lives in the page pool behind ``kv``, a ``serving.cache.PagedKV``).
+    Each layer's attention routes through ``kv.attend`` (the page-table
+    Pallas kernel or its gather-equivalent oracle) instead of a gathered
+    contiguous ring. Returns (logits [S,1,V], one-token cache update: ring
+    leaves with a singleton token axis holding position ``pos``'s K/V, ready
+    for the serve step's single-row page scatter)."""
+    s = token.shape[0]
+    h = params["embed"].astype(cfg.dtype)[token]
+    cos, sin = L.rotary(cfg.rope_theta, pos, cfg.head_dim)   # [S, hd/2]
+    cos, sin = cos[:, None], sin[:, None]                    # [S, 1, hd/2]
+    window = cfg.swa_window or 0
+
+    def body(carry, xs):
+        h = carry
+        li, layer_p = xs
+        a_in = L.rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(layer_p["attn"], a_in, a_in, cfg)
+        q = L.apply_rotary(q, cos, sin)
+        k = L.apply_rotary(k, cos, sin)
+        kc = k[:, 0].astype(cfg.dtype)                        # [S, Hkv, hd]
+        vc = v[:, 0].astype(cfg.dtype)
+        out = kv.attend(li, q[:, 0], kc, vc, window=window,
+                        softmax_dtype=cfg.attn_softmax_dtype)
+        y = jnp.einsum("bshk,hkd->bsd", out[:, None],
+                       layer_p["attn"]["wo"].astype(cfg.dtype))
+        h = h + y
+        f_in = L.rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+        ffn_out, _ = _ffn(layer_p, f_in, cfg)
+        return h + ffn_out, (kc, vc)
+
+    period = cfg.cross_attn_period or 0
+    has_cross = cfg.num_cross_layers > 0
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    if not has_cross:
+        h, (ks, vs) = jax.lax.scan(body, h, (idxs, params["layers"]))
+    else:
+        ng = cfg.num_cross_layers
+        head, tail = _split_grouped(params["layers"], ng, period)
+        idx_head = idxs[: ng * period].reshape(ng, period)
+        # resident cross-K/V leaves are slot-stacked [S, ng, 1, T, Hkv, hd];
+        # the group scan wants the group axis leading and the batch axis
+        # taking the slot lanes.
+        xk_s = jnp.moveaxis(cache["xk"], 0, 1)[:, :, 0]       # [ng, S, T, ...]
+        xv_s = jnp.moveaxis(cache["xv"], 0, 1)[:, :, 0]
+
+        def group_body(carry, xs):
+            h = carry
+            gi, group_layers, xp, xk_g, xv_g = xs
+            h, kvs_g = jax.lax.scan(body, h, (gi, group_layers))
+            h = _cross_decode_apply(h, xp, xk_g, xv_g, cfg)
+            return h, kvs_g
+
+        h, kvs_head = jax.lax.scan(
+            group_body, h,
+            (idx_head, head, params["cross_layers"], xk_s, xv_s))
+        ks, vs = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), kvs_head)
+        rem = cfg.num_layers - ng * period
+        if rem > 0:
+            h, (kt, vt) = jax.lax.scan(body, h, (idxs[ng * period:], tail))
+            ks = jnp.concatenate([ks, kt], 0)
+            vs = jnp.concatenate([vs, vt], 0)
+
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["head"].astype(cfg.dtype))
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    vmask = jnp.where(jnp.arange(cfg.vocab) < cfg.vocab_real, 0.0, NEG_INF)
+
+    # One-token cache update, slot-stacked with per-leaf shapes matching the
+    # full cache at seq extent 1: k/v [S, L, 1, 1, Hkv, hd], slot_pos [S, L, 1].
+    new_cache = {
+        "k": jnp.moveaxis(ks, 1, 0)[:, :, None, None],
+        "v": jnp.moveaxis(vs, 1, 0)[:, :, None, None],
+        "slot_pos": jnp.broadcast_to(
+            pos[:, None, None], (s, cfg.num_layers, 1)).astype(jnp.int32),
+    }
+    if has_cross:
+        new_cache["xk"] = cache["xk"]
+        new_cache["xv"] = cache["xv"]
     return logits + vmask.astype(logits.dtype), new_cache
 
 

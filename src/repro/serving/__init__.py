@@ -11,7 +11,8 @@ knob, like the engine's gradient staleness.
 Smoke: ``PYTHONPATH=src python -m repro.serving``.
 """
 from repro.serving.batcher import ContinuousBatcher, SlotState
-from repro.serving.cache import PagedDecodeCache, PageLayout, build_layout
+from repro.serving.cache import (PagedDecodeCache, PagedKV, PageLayout,
+                                 build_layout)
 from repro.serving.queue import (AdmissionQueue, Clock, Request,
                                  burst_arrivals, poisson_arrivals,
                                  synthetic_requests, uniform_arrivals)
@@ -21,7 +22,7 @@ from repro.serving.snapshot import SnapshotPublisherHook, SnapshotRefresher
 
 __all__ = [
     "AdmissionQueue", "Clock", "ContinuousBatcher", "PagedDecodeCache",
-    "PageLayout", "Request", "ServeReport", "ServedRequest", "Server",
+    "PagedKV", "PageLayout", "Request", "ServeReport", "ServedRequest", "Server",
     "ServingConfig", "SlotState", "SnapshotPublisherHook",
     "SnapshotRefresher", "build_layout", "burst_arrivals",
     "poisson_arrivals", "synthetic_requests", "uniform_arrivals",

@@ -22,7 +22,7 @@ from repro.checkpoint import checkpoint as ckpt
 from repro.engine import EngineConfig, Trainer, build_engine
 from repro.optim import optimizers as optlib
 from repro.serving import (Server, ServingConfig, SnapshotPublisherHook,
-                           synthetic_requests, uniform_arrivals)
+                           synthetic_requests)
 
 ARCH = "deepseek-7b"
 
@@ -49,13 +49,19 @@ def main() -> None:
 
     # The serving half: 5 requests over 2 slots — continuous batching MUST
     # cycle slots (joins > slots), exercising evict-then-join page reuse.
+    # paged="auto" resolves to the in-place page-table attention route on
+    # this arch; prefill_batch=2 exercises batched admission.
     cfg = ServingConfig(arch=ARCH, reduced=True, slots=2, prompt_len=8,
-                        max_seq=24, page_tokens=4, temperature=0.0, seed=0)
+                        max_seq=24, page_tokens=4, temperature=0.0, seed=0,
+                        paged="auto", prefill_batch=2)
     server = Server(cfg)
+    assert server.paged_route == "paged", server.dispatch_report()
     server.make_refresher(snap_dir, every_steps=2)
     gens = [10, 13, 9, 12, 11]
+    # First two arrive together so the opening admission coalesces them into
+    # ONE batched prefill (prefill_calls < joins below).
     reqs = synthetic_requests(5, cfg.prompt_len, 1, api.vocab_real,
-                              arrivals=uniform_arrivals(5, 0.05), seed=1)
+                              arrivals=[0.0, 0.0, 0.1, 0.15, 0.2], seed=1)
     for r, g in zip(reqs, gens):
         r.max_new_tokens = g
 
@@ -73,6 +79,16 @@ def main() -> None:
     summary = report.summary()
     print(json.dumps(summary, indent=1))
 
+    drep = server.dispatch_report()
+    print(f"serve dispatch: paged={drep['paged']}")
+    for op, backend in drep["decisions"].items():
+        print(f"  {op:<16} -> {backend}")
+    # The decode steps above traced through the dispatcher: the paged route
+    # must have placed the page-table attention kernel, not the ref oracle.
+    assert drep["decisions"].get("paged_attention", "").startswith("pallas"), \
+        drep
+    assert report.prefill_calls < report.joins, \
+        "batched admission never coalesced a prefill"
     assert len(report.completed) == 5, summary
     assert report.joins == 5 and report.evicts == 5, summary
     assert report.joins > cfg.slots, "continuous batching never cycled a slot"

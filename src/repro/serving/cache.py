@@ -51,21 +51,37 @@ Pytree = Any
 _PROBE_A, _PROBE_B = 2, 3
 
 
-def _detect_token_axes(api) -> Tuple[Any, List[Optional[int]]]:
-    """(treedef, per-leaf token axis or None) for ``api.init_cache`` leaves."""
-    a = jax.eval_shape(lambda: api.init_cache(1, _PROBE_A)[0])
-    b = jax.eval_shape(lambda: api.init_cache(1, _PROBE_B)[0])
-    leaves_a, treedef = jax.tree.flatten(a)
-    leaves_b = jax.tree.leaves(b)
+def _diff_axes(leaves_a, leaves_b, what: str) -> List[Optional[int]]:
     axes: List[Optional[int]] = []
     for xa, xb in zip(leaves_a, leaves_b):
         if len(xa.shape) != len(xb.shape):
-            raise ValueError(f"cache leaf rank changed with seq_len: {xa} vs {xb}")
+            raise ValueError(f"cache leaf rank changed with {what}: {xa} vs {xb}")
         diff = [i for i, (m, n) in enumerate(zip(xa.shape, xb.shape)) if m != n]
         if len(diff) > 1:
-            raise ValueError(f"cache leaf has several seq-dependent axes: {xa} vs {xb}")
+            raise ValueError(f"cache leaf has several {what}-dependent axes: "
+                             f"{xa} vs {xb}")
         axes.append(diff[0] if diff else None)
-    return treedef, axes
+    return axes
+
+
+def _detect_token_axes(api):
+    """(treedef, per-leaf token axis or None, per-leaf batch axis or None,
+    per-leaf path name) for ``api.init_cache`` leaves. Both axes are
+    *detected* by abstract probing: the axis that stretches with seq_len is
+    the token axis, the one that stretches with batch is the batch axis
+    (leaves without one — e.g. the shared ``slot_pos`` ring positions — get
+    ``None`` and are treated as batch-independent when slicing a batched
+    prefill cache per request)."""
+    a = jax.eval_shape(lambda: api.init_cache(1, _PROBE_A)[0])
+    b = jax.eval_shape(lambda: api.init_cache(1, _PROBE_B)[0])
+    b2 = jax.eval_shape(lambda: api.init_cache(2, _PROBE_B)[0])
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(a)
+    leaves_a = [x for _, x in paths_leaves]
+    names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in paths_leaves]
+    tok_axes = _diff_axes(leaves_a, jax.tree.leaves(b), "seq_len")
+    batch_axes = _diff_axes(jax.tree.leaves(b), jax.tree.leaves(b2), "batch")
+    return treedef, tok_axes, batch_axes, names
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +89,9 @@ class PageLayout:
     """Static token-major packing layout of one arch's decode cache."""
     treedef: Any
     token_axes: Tuple[Optional[int], ...]   # per flattened leaf; None = resident
+    batch_axes: Tuple[Optional[int], ...]   # per flattened leaf; None = shared
+    tok_order: Tuple[int, ...]              # token-leaf pack order (see below)
+    leaf_views: Tuple[Tuple[str, int, Tuple[int, ...]], ...]
     tok_spec: Optional[tm.PackSpec]         # over token-major leaves (lead [C])
     res_spec: tm.PackSpec                   # over length-independent leaves
     tokens: int                             # C: ring rows per slot (0 if none)
@@ -82,6 +101,15 @@ class PageLayout:
     res_width: int
     empty_rows: Optional[jax.Array]         # [C, W] packed init_cache rows
     empty_res: jax.Array                    # [res_width]
+
+    # ``tok_order`` permutes the token leaves inside a packed row so the big
+    # K/V column blocks come FIRST (size-descending, then flatten order) and
+    # small odds and ends like ``slot_pos`` trail. With the natural dict
+    # order (k, slot_pos, v) the tiny slot_pos segment would knock the V
+    # block off its Hkv*hd alignment and every arch would fail the paged
+    # kernel's offset contract. ``leaf_views`` records, per token leaf in
+    # ORIGINAL flatten order, (path name, column offset in the packed row,
+    # per-token shape) — the in-place addresses the paged kernel reads.
 
     @property
     def has_tokens(self) -> bool:
@@ -98,6 +126,7 @@ class PageLayout:
         moved = tm.tree_moveaxis(cache, self.token_axes, 0, lead_ndim=lead)
         leaves = jax.tree.leaves(moved)
         tok = [x for x, ax in zip(leaves, self.token_axes) if ax is not None]
+        tok = [tok[i] for i in self.tok_order]
         res = [x for x, ax in zip(leaves, self.token_axes) if ax is None]
         rows = tm.tree_pack(tok, lead_ndim=lead + 1) if tok else None
         lead_shape = leaves[0].shape[:lead] if leaves else ()
@@ -108,7 +137,10 @@ class PageLayout:
     def unpack_slots(self, rows: Optional[jax.Array], res: jax.Array,
                      lead: int = 1) -> Pytree:
         """Inverse of :meth:`pack_rows`: rebuild the cache pytree."""
-        tok = tm.tree_unpack(rows, self.tok_spec) if self.tok_spec else []
+        tok_p = tm.tree_unpack(rows, self.tok_spec) if self.tok_spec else []
+        tok = [None] * len(tok_p)
+        for packed_i, orig_i in enumerate(self.tok_order):
+            tok[orig_i] = tok_p[packed_i]
         res_leaves = tm.tree_unpack(res, self.res_spec)
         tok_it, res_it = iter(tok), iter(res_leaves)
         leaves = []
@@ -118,6 +150,23 @@ class PageLayout:
             else:  # [*lead, C, *rest] -> token axis back in place
                 leaves.append(jnp.moveaxis(next(tok_it), lead, lead + ax))
         return jax.tree.unflatten(self.treedef, leaves)
+
+    def unpack_resident(self, res: jax.Array) -> Pytree:
+        """Resident leaves only -> the full cache treedef with ``None`` in
+        every token-leaf position (their data stays in the page pool; the
+        paged decode path reads it through :class:`PagedKV`)."""
+        res_it = iter(tm.tree_unpack(res, self.res_spec))
+        leaves = [next(res_it) if ax is None else None
+                  for ax in self.token_axes]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def slice_batch(self, cache: Pytree, b: int) -> Pytree:
+        """Batch row ``b`` of a batched prefill cache, keepdims (batch-
+        independent leaves like ``slot_pos`` pass through shared)."""
+        leaves, _ = jax.tree.flatten(cache)
+        out = [x if ax is None else jax.lax.index_in_dim(x, b, ax, keepdims=True)
+               for x, ax in zip(leaves, self.batch_axes)]
+        return jax.tree.unflatten(self.treedef, out)
 
     # -- the two device-side page ops the serve step uses -------------------
 
@@ -158,36 +207,128 @@ class PageLayout:
             resident = jnp.where(mask[:, None], res, resident)
         return pages, resident
 
+    def scatter_rows(self, pages: jax.Array, resident: jax.Array,
+                     new_cache: Pytree, tables: jax.Array, pos: jax.Array,
+                     mask: jax.Array):
+        """Paged-route write-back: ``new_cache`` carries ONE token per slot
+        (the just-decoded position's leaves, token axes of extent 1), packed
+        into a single [S, W] row and scattered to ring row ``pos % tokens``
+        of each slot's page — the whole-page round-trip of
+        :meth:`scatter_token` never happens. Masked slots write to the null
+        page."""
+        rows, res = self.pack_rows(new_cache, lead=1)    # [S, 1, W], [S, Wr]
+        if self.has_tokens:
+            S = tables.shape[0]
+            row = pos % self.tokens
+            ids = tables[jnp.arange(S), row // self.page_tokens]
+            ids = jnp.where(mask, ids, pages.shape[0] - 1)
+            pages = pages.at[ids, row % self.page_tokens].set(rows[:, 0])
+        if self.res_width:
+            resident = jnp.where(mask[:, None], res, resident)
+        return pages, resident
+
+    def paged_kv(self, pages: jax.Array, tables: jax.Array,
+                 pos: jax.Array) -> "PagedKV":
+        return PagedKV(pages=pages, tables=tables, pos=pos, layout=self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKV:
+    """Device view of the packed page pool handed to ``api.decode_paged``.
+
+    Built inside the jitted serve step; ``attend`` routes one layer's decode
+    attention through ``dispatch.paged_attention`` (Pallas page-table kernel
+    or its jnp oracle), reading the K/V column blocks in place via
+    ``layout.leaf_views`` offsets instead of a gathered contiguous ring."""
+    pages: jax.Array        # [num_pages + 1, T, W]
+    tables: jax.Array       # [S, PPS]
+    pos: jax.Array          # [S] absolute decode positions
+    layout: PageLayout
+
+    def attend(self, layer, q, k_new, v_new, *, window: int = 0,
+               softmax_dtype=jnp.float32, k_leaf: str = "k",
+               v_leaf: str = "v"):
+        """q [S,H,hd], k_new/v_new [S,Hkv,hd] (cache dtype), ``layer`` a
+        traced scalar -> attention output [S,H,hd]."""
+        views = {n: (off, shape) for n, off, shape in self.layout.leaf_views}
+        k_off, k_shape = views[k_leaf]
+        v_off, v_shape = views[v_leaf]
+        s, h, hd = q.shape
+        hkv = k_shape[-2]
+        layers = k_shape[0]
+        if k_shape != v_shape:
+            raise ValueError(f"k/v leaf shapes differ: {k_shape} vs {v_shape}")
+        if int(np.prod(k_shape)) != layers * hkv * hd:
+            raise ValueError(
+                f"k leaf {k_shape} is not [layers, 1.., Hkv, hd] per token")
+        return dispatch.paged_attention(
+            q, k_new, v_new, self.pages, self.tables, self.pos, layer,
+            k_off=k_off, v_off=v_off, kv_heads=hkv, head_dim=hd,
+            tokens=self.layout.tokens, page_tokens=self.layout.page_tokens,
+            window=window, softmax_dtype=softmax_dtype)
+
 
 def build_layout(api, max_seq: int, page_tokens: int = 8) -> PageLayout:
     """Derive the packing layout (and packed empty-cache template) for
-    ``api``'s decode cache at capacity ``max_seq``."""
-    treedef, axes = _detect_token_axes(api)
+    ``api``'s decode cache at capacity ``max_seq``.
+
+    Every leaf rides in fp32 page rows (``treemath.tree_pack`` casts), and an
+    int32 value only round-trips the cast exactly below 2^24 — past that,
+    token ids / ring positions would come back silently corrupted. Validated
+    here against the largest value an int leaf can hold (vocab size or the
+    absolute position bound) instead of at first corruption."""
+    treedef, axes, batch_axes, names = _detect_token_axes(api)
     template = api.init_cache(1, max_seq)[0]
     t_def = jax.tree.structure(template)
     if t_def != treedef:
         raise ValueError(f"init_cache treedef changed with seq_len: {t_def} vs {treedef}")
+
+    int_bound = max(int(getattr(api, "vocab_real", 0) or 0), max_seq)
+    for name, leaf in zip(names, jax.tree.leaves(template)):
+        if jnp.issubdtype(leaf.dtype, jnp.integer) and int_bound >= 1 << 24:
+            raise ValueError(
+                f"cache leaf '{name}' is {leaf.dtype} but values up to "
+                f"{int_bound} do not survive the fp32 page packing "
+                f"(exact only below 2^24 = {1 << 24})")
+
     moved = tm.tree_moveaxis(template, axes, 0)
     leaves = jax.tree.leaves(moved)
     tok = [x for x, ax in zip(leaves, axes) if ax is not None]
+    tok_names = [n for n, ax in zip(names, axes) if ax is not None]
     res = [x for x, ax in zip(leaves, axes) if ax is None]
     c_sizes = {x.shape[0] for x in tok}
     if len(c_sizes) > 1:
         raise ValueError(f"token axes disagree on ring length: {sorted(c_sizes)}")
     tokens = c_sizes.pop() if c_sizes else 0
     page_tokens = max(1, min(page_tokens, tokens) if tokens else 1)
-    tok_spec = tm.pack_spec(tok, lead_ndim=1) if tok else None
+
+    # Pack big leaves first (K/V column blocks), small ones last — keeps the
+    # in-place views the paged kernel reads on their Hkv*hd alignment.
+    per_tok = [int(np.prod(x.shape[1:])) for x in tok]
+    tok_order = tuple(sorted(range(len(tok)), key=lambda i: (-per_tok[i], i)))
+    tok_p = [tok[i] for i in tok_order]
+    offsets, off = {}, 0
+    for i in tok_order:
+        offsets[i] = off
+        off += per_tok[i]
+    leaf_views = tuple(
+        (tok_names[i], offsets[i], tuple(tok[i].shape[1:]))
+        for i in range(len(tok)))
+
+    tok_spec = tm.pack_spec(tok_p, lead_ndim=1) if tok else None
     res_spec = tm.pack_spec(res, lead_ndim=0)
     dispatch.note("serve_cache", "packed" if tok else "resident",
                   f"C={tokens} T={page_tokens} W={tok_spec.total if tok_spec else 0}")
     return PageLayout(
         treedef=treedef, token_axes=tuple(axes),
+        batch_axes=tuple(batch_axes), tok_order=tok_order,
+        leaf_views=leaf_views,
         tok_spec=tok_spec, res_spec=res_spec,
         tokens=tokens, page_tokens=page_tokens,
         pages_per_slot=math.ceil(tokens / page_tokens) if tokens else 0,
         width=tok_spec.total if tok_spec else 0,
         res_width=res_spec.total,
-        empty_rows=tm.tree_pack(tok, lead_ndim=1) if tok else None,
+        empty_rows=tm.tree_pack(tok_p, lead_ndim=1) if tok else None,
         empty_res=(tm.tree_pack(res) if res
                    else jnp.zeros((0,), jnp.float32)),
     )
@@ -203,13 +344,23 @@ class PagedDecodeCache:
     """
 
     def __init__(self, layout: PageLayout, slots: int,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, lazy: bool = False):
         pps = layout.pages_per_slot
         self.layout, self.slots = layout, slots
+        self.lazy = lazy
         self.num_pages = slots * pps if num_pages is None else num_pages
-        if pps and self.num_pages < pps:
+        if pps and not lazy and self.num_pages < pps:
+            # The gather route reads every page slot of a ring (a null-page
+            # row would alias position 0), so a slot needs its full page
+            # complement. The paged route masks null-page rows in-kernel and
+            # allocates lazily — only the rows a request will actually touch
+            # — which is what lets num_pages (and so the pool) sit far below
+            # slots * pages_per_slot while max_seq grows past the gathered
+            # ring capacity.
             raise ValueError(
                 f"num_pages={self.num_pages} cannot hold one slot ({pps} pages)")
+        if pps and lazy and self.num_pages < 1:
+            raise ValueError("lazy paging still needs at least one page")
         self.pages = jnp.zeros(
             (self.num_pages + 1, layout.page_tokens, layout.width), jnp.float32)
         self.resident = jnp.tile(layout.empty_res[None], (slots, 1))
@@ -227,17 +378,40 @@ class PagedDecodeCache:
     def can_alloc(self) -> bool:
         return len(self.free_list) >= self.layout.pages_per_slot
 
-    def alloc(self, slot: int) -> Sequence[int]:
+    def pages_needed(self, prompt_rows: int, new_tokens: int) -> List[int]:
+        """Page slots a request will touch: ring rows [0, prompt_rows) plus
+        the cursor rows ``p % C`` for each generated position. Under the
+        paged route only these are allocated; the rest of the slot's table
+        stays on the null page (masked in-kernel)."""
+        lay = self.layout
+        if not lay.has_tokens:
+            return []
+        c, t = lay.tokens, lay.page_tokens
+        rows = set(range(min(prompt_rows, c)))
+        for p in range(prompt_rows, prompt_rows + max(new_tokens, 0)):
+            if len(rows) >= c:
+                break
+            rows.add(p % c)
+        return sorted({r // t for r in rows})
+
+    def alloc(self, slot: int,
+              page_slots: Optional[Sequence[int]] = None) -> Sequence[int]:
         """Claim pages for ``slot`` from the free list (LIFO: the most
-        recently evicted request's pages are reused first)."""
+        recently evicted request's pages are reused first). ``page_slots``
+        restricts allocation to those table positions (lazy/paged route);
+        default is the full slot complement."""
         if (self.tables[slot] != self.null_page).any():
             raise ValueError(f"slot {slot} already holds pages")
         pps = self.layout.pages_per_slot
-        if len(self.free_list) < pps:
-            raise ValueError(f"page pool exhausted ({len(self.free_list)} < {pps})")
-        got = [self.free_list.pop() for _ in range(pps)]
-        if pps:
-            self.tables[slot] = np.asarray(got, np.int32)
+        if page_slots is None:
+            page_slots = range(pps)
+        page_slots = list(page_slots)
+        if len(self.free_list) < len(page_slots):
+            raise ValueError(f"page pool exhausted "
+                             f"({len(self.free_list)} < {len(page_slots)})")
+        got = [self.free_list.pop() for _ in page_slots]
+        if got:
+            self.tables[slot, page_slots] = np.asarray(got, np.int32)
         return got
 
     def free(self, slot: int) -> Sequence[int]:

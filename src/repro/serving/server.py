@@ -6,16 +6,22 @@ plus the paged cache and the batcher. The loop per iteration:
 
 1. **refresh** — swap in newer trainer-published params (snapshot.py),
 2. **expire** — reject queued requests whose deadline already passed,
-3. **admit**  — while a slot AND pages are free: prefill the next arrived
-   request (batch-1), pack its cache token-major, graft it onto the empty
-   ring template, write the slot's pages, join the batch,
+3. **admit**  — drain every arrived request that fits (a free slot AND page
+   budget), then prefill them TOGETHER: requests are grouped by padded
+   prompt length and prefilled in batches of up to ``prefill_batch`` (chunked
+   to powers of two so the retrace set stays bounded), each slot's cache
+   packed token-major, grafted onto the empty ring template, pages written,
+   batch joined,
 4. **decode** — one jitted step over all slots (masked lanes inert),
 5. **harvest** — append each active slot's token, stamp it with the realized
    parameter staleness, evict finished / past-deadline requests (their pages
    return to the free list for the next admission).
 
 The decode step never retraces on membership changes: joins and evicts only
-flip mask bits and rewrite pages between steps.
+flip mask bits and rewrite pages between steps. Under the paged decode route
+(``ServingConfig.paged``) page allocation is lazy — a request claims only
+the pages its prompt + budget will touch — so ``max_seq`` may exceed what
+``num_pages`` could hold per-slot eagerly.
 """
 from __future__ import annotations
 
@@ -53,6 +59,12 @@ class ServingConfig:
     seed: int = 0
     mesh: str = "1x1"                 # host mesh "DATAxMODEL"
     virtual_dt: Optional[float] = None  # fixed seconds/step clock for tests
+    paged: str = "auto"               # serve decode route: off | auto | on
+    prefill_batch: int = 1            # max requests prefilled per jitted call
+    # Pad prompts up to a multiple of this instead of always prompt_len
+    # (None keeps the legacy always-pad-to-prompt_len semantics; positions
+    # then start at the bucketed length, so short prompts skip the padding).
+    prefill_bucket: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -83,6 +95,10 @@ class ServeReport:
     joins: int
     evicts: int
     refreshes: int
+    prefill_calls: int = 0
+    # wall seconds by loop phase: admit (queue/pack/alloc, prefill excluded),
+    # prefill (jitted prefill calls), decode (jitted serve steps + sync).
+    phase_s: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def tokens_total(self) -> int:
@@ -118,7 +134,11 @@ class ServeReport:
             "joins": self.joins,
             "evicts": self.evicts,
             "refreshes": self.refreshes,
+            "prefill_calls": self.prefill_calls,
+            "phase_s": {k: round(v, 4) for k, v in self.phase_s.items()},
             "ttft_p50_s": (round(float(np.percentile(ttfts, 50)), 4)
+                           if ttfts else None),
+            "ttft_p99_s": (round(float(np.percentile(ttfts, 99)), 4)
                            if ttfts else None),
             "latency_p50_s": (round(self._latency(50), 4)
                               if self.completed else None),
@@ -144,12 +164,20 @@ class Server:
         self.pplan = planlib.plan_prefill(
             self.arch, self._pshape, self.mesh, overrides=cfg.overrides,
             reduced=cfg.reduced)
-        self.cache = PagedDecodeCache(self.layout, cfg.slots, cfg.num_pages)
+        self.paged_route, self._paged_why = planlib.resolve_serve_paged(
+            self.api, self.layout, self.arch, self.mesh, cfg.paged)
+        # The paged route masks null-page rows in-kernel, so requests claim
+        # only the pages they will touch; the gather route reads whole rings
+        # and needs every slot fully paged.
+        self._lazy_pages = self.paged_route == "paged"
+        self.cache = PagedDecodeCache(self.layout, cfg.slots, cfg.num_pages,
+                                      lazy=self._lazy_pages)
         self.splan = planlib.plan_serve_step(
             self.arch, dshape, self.mesh, layout=self.layout,
             num_pages=self.cache.num_pages, overrides=cfg.overrides,
-            reduced=cfg.reduced)
+            reduced=cfg.reduced, paged=cfg.paged)
         self._prefill = self.pplan.jit()
+        self._prefill_plans = {(cfg.prompt_len, 1): self._prefill}
         self._step = self.splan.jit()
 
         if params is None:
@@ -159,6 +187,14 @@ class Server:
         self.batcher = ContinuousBatcher(cfg.slots)
         self._key = jax.random.PRNGKey(cfg.seed)
         self.decode_steps = 0
+        self.prefill_calls = 0
+        self.phase_s = {"admit": 0.0, "prefill": 0.0, "decode": 0.0}
+
+    def dispatch_report(self) -> dict:
+        """Route + kernel dispatch decisions (``launch/serve.py --paged``)."""
+        from repro.kernels import dispatch
+        return {"paged": self.paged_route, "why": self._paged_why,
+                "decisions": dispatch.report()}
 
     # -- params plumbing -----------------------------------------------------
 
@@ -194,18 +230,46 @@ class Server:
 
     # -- admission -----------------------------------------------------------
 
-    def _prefill_batch(self, r: Request) -> Dict[str, jax.Array]:
-        prompt = np.zeros((self.cfg.prompt_len,), np.int32)
-        n = min(len(r.prompt), self.cfg.prompt_len)
-        prompt[:n] = np.asarray(r.prompt[:n], np.int32)
-        batch = {"tokens": jnp.asarray(prompt[None, :])}
-        spec = self.api.batch_spec(self._pshape)
+    def _bucket_len(self, r: Request) -> int:
+        """Padded prefill length for ``r``: prompt_len unless prefill_bucket
+        quantization is on (then the next multiple of the bucket)."""
+        cap, q = self.cfg.prompt_len, self.cfg.prefill_bucket
+        if not q:
+            return cap
+        n = max(1, min(len(r.prompt), cap))
+        return min(cap, -(-n // q) * q)
+
+    def _pf_shape(self, length: int, batch: int) -> InputShape:
+        return InputShape(f"serve_prefill_{length}x{batch}", length, batch,
+                          "prefill")
+
+    def _get_prefill(self, length: int, batch: int):
+        """Jitted prefill at (length, batch) — cached so the retrace set is
+        bounded by the bucket count x log2(prefill_batch)."""
+        fn = self._prefill_plans.get((length, batch))
+        if fn is None:
+            fn = planlib.plan_prefill(
+                self.arch, self._pf_shape(length, batch), self.mesh,
+                overrides=self.cfg.overrides, reduced=self.cfg.reduced).jit()
+            self._prefill_plans[(length, batch)] = fn
+        return fn
+
+    def _prefill_inputs(self, reqs: Sequence[Request],
+                        length: int) -> Dict[str, jax.Array]:
+        prompts = np.zeros((len(reqs), length), np.int32)
+        for b, r in enumerate(reqs):
+            n = min(len(r.prompt), length)
+            prompts[b, :n] = np.asarray(r.prompt[:n], np.int32)
+        batch = {"tokens": jnp.asarray(prompts)}
+        spec = self.api.batch_spec(self._pf_shape(length, 1))
         for name, struct in spec.items():  # enc-dec frames, VLM cross_feats
             if name == "tokens":
                 continue
-            feat = (r.features or {}).get(name)
-            batch[name] = (jnp.asarray(feat, struct.dtype) if feat is not None
-                           else jnp.zeros(struct.shape, struct.dtype))
+            rows = [(jnp.asarray((r.features or {}).get(name), struct.dtype)
+                     if (r.features or {}).get(name) is not None
+                     else jnp.zeros(struct.shape, struct.dtype))
+                    for r in reqs]
+            batch[name] = jnp.concatenate(rows, axis=0)
         return batch
 
     def _sample_first(self, logits: jax.Array, rid: int) -> int:
@@ -215,23 +279,70 @@ class Server:
             return int(jax.random.categorical(k, row / self.cfg.temperature))
         return int(jnp.argmax(row))
 
-    def _join(self, slot: int, r: Request, now: float) -> None:
+    def _pages_for(self, r: Request, length: int) -> Optional[List[int]]:
+        """Page slots ``r`` will touch (lazy/paged route); None = eager full
+        complement. One spare generated row is budgeted past the last decode
+        step, which at worst rounds up to one extra page."""
+        if not self._lazy_pages:
+            return None
+        return self.cache.pages_needed(length, r.max_new_tokens)
+
+    def _admit(self, q: AdmissionQueue, now: float) -> None:
+        """Drain every arrived request that fits, then prefill them together,
+        grouped by padded length and chunked to power-of-two batches."""
+        free = [i for i, s in enumerate(self.batcher.slots) if s is None]
+        budget = self.cache.free_pages
+        picked: List[Tuple[int, Request, int]] = []
+        while free:
+            r = q.pop_ready(now)
+            if r is None:
+                break
+            length = self._bucket_len(r)
+            pages = self._pages_for(r, length)
+            need = (self.layout.pages_per_slot if pages is None
+                    else len(pages))
+            if need > budget:
+                q.push_front(r)
+                break
+            budget -= need
+            picked.append((free.pop(0), r, length))
+        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        for slot, r, length in picked:
+            groups.setdefault(length, []).append((slot, r))
+        for length, group in groups.items():
+            i = 0
+            while i < len(group):
+                b = min(self.cfg.prefill_batch, len(group) - i)
+                b = 1 << (max(b, 1).bit_length() - 1)  # power-of-two chunks
+                self._join_group(group[i:i + b], length, now)
+                i += b
+
+    def _join_group(self, group: Sequence[Tuple[int, Request]], length: int,
+                    now: float) -> None:
         t0 = time.monotonic()
-        logits, pcache = self._prefill(self.params, self._prefill_batch(r))
-        first = self._sample_first(logits, r.rid)
-        rows, res = self.layout.pack_rows(pcache)
-        if self.layout.has_tokens and rows.shape[0] < self.layout.tokens:
-            # Prompt shorter than the ring: graft onto the empty template
-            # (identity row mapping — both rings index rows by pos % C, and
-            # prefill rows [0, C_p) hold positions [0, C_p)).
-            rows = self.layout.empty_rows.at[: rows.shape[0]].set(rows)
-        self.cache.alloc(slot)
-        self.cache.write_rows(slot, rows, res)
-        self.batcher.join(slot, SlotState(
-            request=r, next_token=first, pos=self.cfg.prompt_len,
-            remaining=r.max_new_tokens - 1, join_s=now,
-            ttft_s=time.monotonic() - t0, tokens=[first],
-            staleness=[self._staleness()]))
+        reqs = [r for _, r in group]
+        logits, pcache = self._get_prefill(length, len(reqs))(
+            self.params, self._prefill_inputs(reqs, length))
+        logits = jax.block_until_ready(logits)
+        elapsed = time.monotonic() - t0
+        self.prefill_calls += 1
+        self.phase_s["prefill"] += elapsed
+        for b, (slot, r) in enumerate(group):
+            first = self._sample_first(logits[b:b + 1], r.rid)
+            rows, res = self.layout.pack_rows(
+                self.layout.slice_batch(pcache, b))
+            if self.layout.has_tokens and rows.shape[0] < self.layout.tokens:
+                # Prompt shorter than the ring: graft onto the empty template
+                # (identity row mapping — both rings index rows by pos % C,
+                # and prefill rows [0, C_p) hold positions [0, C_p)).
+                rows = self.layout.empty_rows.at[: rows.shape[0]].set(rows)
+            self.cache.alloc(slot, self._pages_for(r, length))
+            self.cache.write_rows(slot, rows, res)
+            self.batcher.join(slot, SlotState(
+                request=r, next_token=first, pos=length,
+                remaining=r.max_new_tokens - 1, join_s=now,
+                ttft_s=elapsed, tokens=[first],
+                staleness=[self._staleness()]))
 
     def _staleness(self) -> Tuple[int, Optional[float]]:
         if self.refresher is None:
@@ -246,6 +357,8 @@ class Server:
         clock = Clock(self.cfg.virtual_dt)
         completed: List[ServedRequest] = []
         expired: List[int] = []
+        self.prefill_calls = 0
+        self.phase_s = {"admit": 0.0, "prefill": 0.0, "decode": 0.0}
         t0 = time.monotonic()
 
         while q.pending or self.batcher.any_active:
@@ -257,12 +370,11 @@ class Server:
 
             expired.extend(r.rid for r in q.expire(now))
 
-            while (self.batcher.free_slot() is not None
-                   and self.cache.can_alloc()):
-                r = q.pop_ready(now)
-                if r is None:
-                    break
-                self._join(self.batcher.free_slot(), r, now)
+            t_admit = time.monotonic()
+            p_before = self.phase_s["prefill"]
+            self._admit(q, now)
+            self.phase_s["admit"] += ((time.monotonic() - t_admit)
+                                      - (self.phase_s["prefill"] - p_before))
 
             # max_new_tokens == 1 is satisfied by the prefill token alone
             for i in self.batcher.active():
@@ -275,16 +387,17 @@ class Server:
 
             tokens, pos, mask = self.batcher.arrays()
             key = jax.random.fold_in(self._key, self.decode_steps)
+            t_dec = time.monotonic()
             next_tok, self.cache.pages, self.cache.resident = self._step(
                 self.params, self.cache.pages, self.cache.resident,
                 self.cache.table_device(), jnp.asarray(tokens),
                 jnp.asarray(pos), jnp.asarray(mask), key,
                 jnp.float32(self.cfg.temperature))
+            next_np = np.asarray(next_tok)           # sync for honest timing
+            self.phase_s["decode"] += time.monotonic() - t_dec
             self.decode_steps += 1
             clock.tick()
             now = clock.now()
-
-            next_np = np.asarray(next_tok)
             stale = self._staleness()
             for i in self.batcher.active():
                 s = self.batcher.slots[i]
@@ -306,7 +419,8 @@ class Server:
             completed=completed, expired_rids=expired,
             wall_s=time.monotonic() - t0, decode_steps=self.decode_steps,
             joins=self.batcher.joins, evicts=self.batcher.evicts,
-            refreshes=(self.refresher.refreshes if self.refresher else 0))
+            refreshes=(self.refresher.refreshes if self.refresher else 0),
+            prefill_calls=self.prefill_calls, phase_s=dict(self.phase_s))
 
     def _finish(self, slot: int, completed: List[ServedRequest], now: float,
                 reason: str) -> None:

@@ -1,0 +1,215 @@
+"""The paged serve plane (PR 8): route resolution (off/auto/on), in-place
+page-table decode vs the gather reference (bitwise token equality, greedy and
+sampled), kernel-contract fallback to the ref oracle on odd widths, lazy
+allocation serving max_seq past the gathered pool capacity, batched prefill
+admission, and the fp32 page-packing int-leaf guard."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.engine.plan import resolve_serve_paged
+from repro.serving import (PagedDecodeCache, Server, ServingConfig,
+                           build_layout, synthetic_requests)
+
+ARCH = "deepseek-7b"       # reduced: 2-layer fp32 transformer, vocab 512
+MAX_SEQ, PAGE_TOKENS, PROMPT = 24, 4, 8
+
+
+def make_server(arch=ARCH, **kw):
+    base = dict(arch=arch, reduced=True, slots=2, prompt_len=PROMPT,
+                max_seq=MAX_SEQ, page_tokens=PAGE_TOKENS, temperature=0.0,
+                seed=0, virtual_dt=0.01)
+    base.update(kw)
+    return Server(ServingConfig(**base))
+
+
+def _served(server, n=2, gens=(5, 9), seed=3):
+    reqs = synthetic_requests(n, PROMPT, 1, server.api.vocab_real, seed=seed)
+    for r, g in zip(reqs, gens):
+        r.max_new_tokens = g
+    rep = server.run(reqs)
+    return {r.rid: r.tokens for r in rep.completed}, rep
+
+
+# -- route resolution --------------------------------------------------------
+
+def test_route_resolution_tri_state():
+    assert make_server(paged="auto").paged_route == "paged"
+    assert make_server(paged="on").paged_route == "paged"
+    srv = make_server(paged="off")
+    assert srv.paged_route == "gather"
+    assert srv.dispatch_report()["why"] == "config off"
+
+
+def test_route_resolution_resident_and_vetoes():
+    # SSM: no token-major leaves at all — trivially in place, even under "on".
+    ssm = cfglib.get("mamba2-1.3b").api(reduced=True)
+    layout = build_layout(ssm, MAX_SEQ, PAGE_TOKENS)
+    route, why = resolve_serve_paged(ssm, layout, paged="on")
+    assert route == "resident" and "no token-major" in why
+
+    # FSDP placement vetoes the packed page view exactly like the training
+    # kernels: auto degrades to the gather reference, "on" refuses to lie.
+    fsdp = cfglib.get("deepseek-67b")
+    api = fsdp.api(reduced=True)
+    lay = build_layout(api, MAX_SEQ, PAGE_TOKENS)
+    route, why = resolve_serve_paged(api, lay, fsdp, None, "auto")
+    assert route == "gather" and "FSDP" in why
+    with pytest.raises(ValueError, match="vetoed by placement"):
+        resolve_serve_paged(api, lay, fsdp, None, "on")
+
+    # A family without decode_paged can never take the paged route.
+    hyb = cfglib.get("zamba2-7b").api(reduced=True)
+    hlay = build_layout(hyb, MAX_SEQ, PAGE_TOKENS)
+    if hlay.has_tokens:
+        route, why = resolve_serve_paged(hyb, hlay, paged="auto")
+        assert route == "gather" and "decode_paged" in why
+        with pytest.raises(ValueError, match="decode_paged"):
+            resolve_serve_paged(hyb, hlay, paged="on")
+
+
+# -- paged vs gather equivalence ---------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "whisper-base"])
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_paged_matches_gather(arch, temperature):
+    """Identical request stream through both routes: the in-place page-table
+    decode must reproduce the gather reference token for token, greedy AND
+    sampled (both routes burn the same per-slot key sequence)."""
+    out = {}
+    for mode in ("on", "off"):
+        srv = make_server(arch=arch, paged=mode, temperature=temperature)
+        out[mode], rep = _served(srv)
+        assert len(rep.completed) == 2
+    assert out["on"] == out["off"]
+
+
+def test_greedy_pinned_under_paged_on():
+    """paged="on" greedy decoding is deterministic across fresh servers (the
+    regression pin for the in-place route: any stray null-page read or
+    misaligned column view shows up as a token diff here)."""
+    a, rep_a = _served(make_server(paged="on"))
+    b, rep_b = _served(make_server(paged="on"))
+    assert a == b
+    assert [len(t) for _, t in sorted(a.items())] == [5, 9]
+    assert rep_a.decode_steps == rep_b.decode_steps
+
+
+def test_odd_width_falls_back_to_ref_oracle():
+    """head_dim=24 breaks the kernel's 128-lane column contract: the route
+    stays paged (the math is route-level) but dispatch lands on the jnp ref
+    oracle — and the tokens still match the gather reference."""
+    ov = {"head_dim": 24}
+    paged = make_server(paged="on", overrides=ov)
+    got, _ = _served(paged)
+    backend = paged.dispatch_report()["decisions"].get("paged_attention", "")
+    assert backend.startswith("ref"), paged.dispatch_report()
+    ref, _ = _served(make_server(paged="off", overrides=ov))
+    assert got == ref
+
+
+# -- lazy allocation / overcommit --------------------------------------------
+
+def test_overcommit_serves_beyond_gathered_capacity():
+    """max_seq=64 needs 16 pages per gathered slot (32 for the pool); the
+    lazy paged route serves both slots on 8 total because requests claim only
+    the pages their prompt + budget touch."""
+    kw = dict(max_seq=64, num_pages=8, prompt_len=PROMPT)
+    srv = make_server(paged="on", **kw)
+    eager = srv.cfg.slots * srv.layout.pages_per_slot
+    assert srv.cache.num_pages < eager
+    served, rep = _served(srv, gens=(4, 6))
+    assert sorted(len(t) for t in served.values()) == [4, 6]
+    # drained: every page back on the free list
+    assert srv.cache.free_pages == srv.cache.num_pages
+    # the gather route cannot even build this pool
+    with pytest.raises(ValueError, match="cannot hold one slot"):
+        make_server(paged="off", **kw)
+
+
+def test_eager_pool_rejects_undercommit():
+    layout = build_layout(cfglib.get(ARCH).api(reduced=True),
+                          MAX_SEQ, PAGE_TOKENS)
+    pps = layout.pages_per_slot
+    with pytest.raises(ValueError):
+        PagedDecodeCache(layout, slots=1, num_pages=pps - 1)
+    # lazy accepts the same pool (and still needs at least one page)
+    assert PagedDecodeCache(layout, slots=1, num_pages=pps - 1,
+                            lazy=True).num_pages == pps - 1
+    with pytest.raises(ValueError):
+        PagedDecodeCache(layout, slots=1, num_pages=0, lazy=True)
+
+
+# -- batched prefill admission -----------------------------------------------
+
+def test_batched_admission_equivalence_and_fewer_prefills():
+    """A burst admitted with prefill_batch=4 produces the same tokens as
+    one-at-a-time admission, in a single jitted prefill call."""
+    def serve(pfb):
+        srv = make_server(slots=4, prefill_batch=pfb)
+        reqs = synthetic_requests(4, PROMPT, 3, srv.api.vocab_real, seed=9)
+        rep = srv.run(reqs)
+        return {r.rid: r.tokens for r in rep.completed}, rep
+
+    one, rep1 = serve(1)
+    four, rep4 = serve(4)
+    assert one == four and len(one) == 4
+    assert rep1.prefill_calls == 4
+    assert rep4.prefill_calls == 1
+    assert rep4.phase_s["prefill"] > 0.0
+
+
+def test_admission_chunks_to_powers_of_two():
+    """slots=4 but prefill_batch=3: a 4-burst admits as 2+2 (each chunk
+    rounds down to a power of two, bounding the retrace set to log2 widths),
+    still one join per request."""
+    srv = make_server(slots=4, prefill_batch=3)
+    reqs = synthetic_requests(4, PROMPT, 2, srv.api.vocab_real, seed=9)
+    rep = srv.run(reqs)
+    assert len(rep.completed) == 4 and rep.joins == 4
+    assert rep.prefill_calls == 2
+    assert (PROMPT, 2) in srv._prefill_plans
+    assert (PROMPT, 3) not in srv._prefill_plans
+
+
+# -- the fp32 page-packing int guard -----------------------------------------
+
+class _FakeAPI:
+    """Minimal init_cache surface for build_layout: one int token-id ring
+    leaf + one K/V-ish float leaf."""
+
+    def __init__(self, vocab):
+        self.vocab_real = vocab
+
+    def init_cache(self, batch, seq):
+        return ({"tok": jnp.zeros((batch, seq), jnp.int32),
+                 "k": jnp.zeros((2, batch, seq, 2, 8), jnp.float32)}, None)
+
+
+def test_int_leaf_guard_at_build_layout():
+    with pytest.raises(ValueError, match="2\\^24"):
+        build_layout(_FakeAPI(1 << 24), MAX_SEQ, PAGE_TOKENS)
+    # just below the exact-fp32 bound is fine
+    lay = build_layout(_FakeAPI((1 << 24) - 1), MAX_SEQ, PAGE_TOKENS)
+    assert lay.has_tokens and lay.tokens == MAX_SEQ
+
+
+def test_leaf_views_satisfy_kernel_offset_contract():
+    """The packed row puts the big K/V column blocks first: each block's
+    offset is a multiple of its own per-token size (the in-place address
+    arithmetic the paged kernel's page loads rely on)."""
+    api = cfglib.get(ARCH).api(reduced=True)
+    lay = build_layout(api, MAX_SEQ, PAGE_TOKENS)
+    views = {n: (off, shape) for n, off, shape in lay.leaf_views}
+    assert "k" in views and "v" in views
+    for name in ("k", "v"):
+        off, shape = views[name]
+        assert off % int(np.prod(shape)) == 0, (name, off, shape)
+    # small odds and ends (slot_pos etc.) trail the K/V blocks
+    kv_end = max(views[n][0] + int(np.prod(views[n][1])) for n in ("k", "v"))
+    for name, (off, shape) in views.items():
+        if name not in ("k", "v"):
+            assert off >= kv_end, (name, off)
